@@ -1,0 +1,104 @@
+"""Paper Fig. 5: Kronecker-product compression — CS vs HCS vs FCS:
+compress time, decompress time, relative error, hash memory, across CRs.
+
+Exact paper sizes: A (30,40), B (40,50) uniform [-5,5]; D=20.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_once
+from repro.core import (
+    cs_apply, cs_unsketch, fcs_kron_compress, fcs_kron_decompress,
+    fcs_sketch_len, make_mode_hash, make_tensor_hashes,
+    storage_bytes_cs_long, storage_bytes_tabulated,
+)
+from repro.core.sketches import hcs_general
+
+SHA, SHB = (30, 40), (40, 50)
+
+
+def _hcs_kron(A, B, hashes):
+    """HCS of A (x) B via the outer-product structure (Shi 2019)."""
+    skA = hcs_general(A, hashes[:2])            # (D, J1, J2)
+    skB = hcs_general(B, hashes[2:])            # (D, J3, J4)
+    return jnp.einsum("dab,dce->dabce", skA, skB)
+
+
+def _hcs_kron_decompress(sk, hashes, shapeA, shapeB):
+    mh = hashes
+    I1, I2 = shapeA
+    I3, I4 = shapeB
+
+    def one(d):
+        g = sk[d][mh[0].h[d][:, None, None, None],
+                  mh[1].h[d][None, :, None, None],
+                  mh[2].h[d][None, None, :, None],
+                  mh[3].h[d][None, None, None, :]]
+        sign = (mh[0].s[d][:, None, None, None]
+                * mh[1].s[d][None, :, None, None]
+                * mh[2].s[d][None, None, :, None]
+                * mh[3].s[d][None, None, None, :])
+        return sign * g
+    est = jnp.median(jax.lax.map(one, jnp.arange(mh[0].D)), axis=0)
+    return est.transpose(0, 2, 1, 3).reshape(I1 * I3, I2 * I4)
+
+
+def run(crs=(2, 4, 8, 16), D=20, seed=0):
+    key = jax.random.PRNGKey(seed)
+    kA, kB = jax.random.split(key)
+    A = jax.random.uniform(kA, SHA, minval=-5.0, maxval=5.0)
+    B = jax.random.uniform(kB, SHB, minval=-5.0, maxval=5.0)
+    K = jnp.kron(A, B)
+    numel = K.size
+    dims = SHA + SHB
+
+    for cr in crs:
+        Jt = max(8, numel // cr)
+        J = max(2, (Jt + 3) // 4)               # per-mode (4J - 3 = Jt)
+        Jt = fcs_sketch_len([J] * 4)
+        # FCS
+        hashes = make_tensor_hashes(jax.random.fold_in(key, cr), dims, J, D)
+        f_c = jax.jit(lambda a, b: fcs_kron_compress(a, b, hashes))
+        sec_c, sk = time_once(f_c, A, B)
+        f_d = jax.jit(lambda s: fcs_kron_decompress(s, hashes, SHA, SHB))
+        sec_d, Khat = time_once(f_d, sk)
+        err = float(jnp.linalg.norm(Khat - K) / jnp.linalg.norm(K))
+        mem = storage_bytes_tabulated(hashes)
+        emit(f"kron_fig5/fcs/cr{cr}", sec_c,
+             f"decomp_us={sec_d*1e6:.0f};rel_err={err:.4f};hash_bytes={mem}")
+        # HCS at matched sketched dim: J_h^4 ~= Jt
+        Jh = max(2, round(Jt ** 0.25))
+        hh = make_tensor_hashes(jax.random.fold_in(key, cr + 100), dims,
+                                Jh, D)
+        h_c = jax.jit(lambda a, b: _hcs_kron(a, b, hh))
+        sec_c, skh = time_once(h_c, A, B)
+        h_d = jax.jit(lambda s: _hcs_kron_decompress(s, hh, SHA, SHB))
+        sec_d, Kh2 = time_once(h_d, skh)
+        err = float(jnp.linalg.norm(Kh2 - K) / jnp.linalg.norm(K))
+        emit(f"kron_fig5/hcs/cr{cr}", sec_c,
+             f"decomp_us={sec_d*1e6:.0f};rel_err={err:.4f};"
+             f"hash_bytes={storage_bytes_tabulated(hh)}")
+        # CS on the materialized Kronecker product (long hash pair)
+        mh = make_mode_hash(jax.random.fold_in(key, cr + 200), numel, Jt, D)
+        c_c = jax.jit(lambda a, b: cs_apply(jnp.kron(a, b).reshape(-1), mh))
+        sec_c, skc = time_once(c_c, A, B)
+        c_d = jax.jit(lambda s: cs_unsketch(s, mh))
+        sec_d, Kc = time_once(c_d, skc)
+        err = float(jnp.linalg.norm(Kc.reshape(K.shape) - K)
+                    / jnp.linalg.norm(K))
+        emit(f"kron_fig5/cs/cr{cr}", sec_c,
+             f"decomp_us={sec_d*1e6:.0f};rel_err={err:.4f};"
+             f"hash_bytes={storage_bytes_cs_long(dims, D)}")
+
+
+def main():
+    argparse.ArgumentParser().parse_args()
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,134 @@
+"""Paper Table 4: sketched tensor-regression-layer (CP-TRL) classification
+under varying compression ratios — CS vs TS vs FCS.
+
+Paper setting: FMNIST, two conv+maxpool layers, activation (7,7,32),
+C=10 classes.  Offline container => deterministic synthetic 10-class
+dataset with the same activation tensor shape: class templates in a frozen
+random conv feature space + noise (the comparison CS/TS/FCS at equal CR is
+what the table is about; absolute accuracy differs from FMNIST).
+
+The TRL weight tensor W (7,7,32,C) and activations X (B,7,7,32) are
+sketched with the SAME per-mode hashes (J_n per mode) and the logits are
+<sk(X), sk(W_c)> + b (Eq. 20/21); the sketched head is trained directly.
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.core import fcs_sketch_len, make_tensor_hashes
+from repro.core.hashes import combined_fcs_hash
+from repro.core.sketches import fcs_general, ts_general
+
+FEAT = (7, 7, 32)
+C = 10
+
+
+def _dataset(key, templates, n=2048, noise=4.0):
+    """Synthetic 10-class data in the (7,7,32) feature space: shared class
+    templates + per-example noise (noise 4.0 makes the dense problem
+    non-trivial so compression differences show)."""
+    kx, kl = jax.random.split(key)
+    labels = jax.random.randint(kl, (n,), 0, C)
+    x = templates[labels] + noise * jax.random.normal(kx, (n,) + FEAT)
+    return x, labels
+
+
+def _sketch_batch(X, hashes, kind):
+    """X: (B,)+FEAT -> (B, J~) (D=1; batched via vmap over examples)."""
+    f = {"fcs": fcs_general, "ts": ts_general}[kind]
+    return jax.vmap(lambda x: f(x, hashes)[0])(X)
+
+
+def _cs_batch(X, h, s, J):
+    flat = X.reshape(X.shape[0], -1)
+    onehot = (jax.nn.one_hot(h, J, dtype=flat.dtype)
+              * s[:, None].astype(flat.dtype))
+    return flat @ onehot
+
+
+def _train_head(xs, labels, xs_test, labels_test, steps=300, lr=0.5):
+    # standardize feature scale so one lr works across CRs/sketch kinds
+    scale = jnp.sqrt(jnp.mean(xs ** 2) + 1e-9)
+    xs = xs / scale
+    xs_test = xs_test / scale
+    Jt = xs.shape[-1]
+    W = jnp.zeros((Jt, C))
+    b = jnp.zeros((C,))
+
+    @jax.jit
+    def step(W, b):
+        def loss_fn(W, b):
+            logits = xs @ W + b
+            lp = jax.nn.log_softmax(logits)
+            return -jnp.mean(jnp.take_along_axis(lp, labels[:, None], 1))
+        g = jax.grad(loss_fn, argnums=(0, 1))(W, b)
+        return W - lr * g[0], b - lr * g[1]
+
+    for _ in range(steps):
+        W, b = step(W, b)
+    acc = float(jnp.mean(jnp.argmax(xs_test @ W + b, -1) == labels_test))
+    return acc
+
+
+def run(crs=(20, 40, 100), seed=0, n_train=2048, n_test=512):
+    key = jax.random.PRNGKey(seed)
+    # spatially smooth templates (cumulative sums over the two spatial
+    # modes): FCS's selling point is preserving spatial structure, which
+    # white-noise templates cannot exercise.
+    raw = jax.random.normal(jax.random.fold_in(key, 99), (C,) + FEAT)
+    templates = jnp.cumsum(jnp.cumsum(raw, axis=1), axis=2)
+    templates = templates / jnp.sqrt(jnp.mean(templates ** 2))
+    Xtr, ytr = _dataset(jax.random.fold_in(key, 0), templates, n_train)
+    Xte, yte = _dataset(jax.random.fold_in(key, 1), templates, n_test)
+    numel = FEAT[0] * FEAT[1] * FEAT[2]
+
+    # dense baseline
+    acc = _train_head(Xtr.reshape(n_train, -1), ytr,
+                      Xte.reshape(n_test, -1), yte)
+    emit("trl_table4/dense/cr1", 0.0, f"acc={acc:.4f}")
+
+    for cr in crs:
+        Jt_target = max(C + 2, numel // cr)
+        # per-mode J for FCS/TS: sum J_n - N + 1 = Jt -> spread by mode size
+        total = Jt_target + 2
+        j1 = max(2, round(total * FEAT[0] / sum(FEAT)))
+        j2 = max(2, round(total * FEAT[1] / sum(FEAT)))
+        j3 = max(2, total - j1 - j2)
+        hashes = make_tensor_hashes(jax.random.fold_in(key, 2),
+                                    FEAT, (j1, j2, j3), 1)
+        Jt = fcs_sketch_len((j1, j2, j3))
+        for kind in ("fcs", "ts"):
+            Jlen = Jt if kind == "fcs" else j1  # TS circular: length J
+            if kind == "ts":
+                hs = make_tensor_hashes(jax.random.fold_in(key, 3),
+                                        FEAT, Jt, 1)  # equal sketch length
+                xs_tr = _sketch_batch(Xtr, hs, "ts")
+                xs_te = _sketch_batch(Xte, hs, "ts")
+            else:
+                xs_tr = _sketch_batch(Xtr, hashes, "fcs")
+                xs_te = _sketch_batch(Xte, hashes, "fcs")
+            sec = timeit(lambda a=xs_tr: a, reps=1, warmup=0)
+            acc = _train_head(xs_tr, ytr, xs_te, yte)
+            emit(f"trl_table4/{kind}/cr{cr}", sec, f"acc={acc:.4f};Jt={Jt}")
+        # CS baseline: one long hash pair over numel
+        from repro.core import make_mode_hash
+        mh = make_mode_hash(jax.random.fold_in(key, 4), numel, Jt, 1)
+        xs_tr = _cs_batch(Xtr, mh.h[0], mh.s[0], Jt)
+        xs_te = _cs_batch(Xte, mh.h[0], mh.s[0], Jt)
+        acc = _train_head(xs_tr, ytr, xs_te, yte)
+        emit(f"trl_table4/cs/cr{cr}", 0.0, f"acc={acc:.4f};Jt={Jt}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.parse_args()
+    run()
+
+
+if __name__ == "__main__":
+    main()

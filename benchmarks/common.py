@@ -1,0 +1,39 @@
+"""Shared benchmark utilities: timing + CSV emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+ROWS = []
+
+
+def timeit(fn: Callable, *args, reps: int = 3, warmup: int = 1) -> float:
+    """Median wall seconds of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(reps):
+        t0 = time.time()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.time() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def time_once(fn, *args):
+    """(seconds, result) for a single blocking call."""
+    t0 = time.time()
+    out = fn(*args)
+    jax.block_until_ready(out)
+    return time.time() - t0, out
+
+
+def emit(name: str, seconds: float, derived: str = "") -> None:
+    """CSV row: name,us_per_call,derived."""
+    row = f"{name},{seconds * 1e6:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)

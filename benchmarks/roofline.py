@@ -1,0 +1,68 @@
+"""Roofline report generator: reads results/dryrun*.json and prints the
+per-(arch x shape x mesh) three-term table + bottleneck + 6ND ratios.
+
+  PYTHONPATH=src python -m benchmarks.roofline [--json results/dryrun.json]
+      [--md results/roofline.md] [--mesh 16x16]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def fmt_table(results, mesh=None):
+    rows = []
+    hdr = ("arch", "shape", "mesh", "strat", "compute_ms", "memory_ms",
+           "coll_ms", "dominant", "peak_GiB", "useful_ratio", "step_LB_ms")
+    rows.append(hdr)
+    for r in sorted(results, key=lambda r: (r["arch"], r["shape"],
+                                            r["mesh"])):
+        if r.get("tag"):
+            continue
+        if mesh and r["mesh"] != mesh:
+            continue
+        if r["status"] == "skipped":
+            rows.append((r["arch"], r["shape"], r["mesh"], "-", "-", "-",
+                         "-", "SKIP(full-attn @500k)", "-", "-", "-"))
+            continue
+        if r["status"] != "ok":
+            rows.append((r["arch"], r["shape"], r["mesh"], "-", "-", "-",
+                         "-", "ERROR", "-", "-", "-"))
+            continue
+        rf = r["roofline"]
+        rows.append((
+            r["arch"], r["shape"], r["mesh"], r.get("strategy", "?"),
+            f"{rf['t_compute_s']*1e3:.1f}", f"{rf['t_memory_s']*1e3:.1f}",
+            f"{rf['t_collective_s']*1e3:.1f}", rf["dominant"],
+            f"{r['memory']['peak_bytes_per_device']/2**30:.2f}",
+            f"{r['useful_flops_ratio']:.3f}",
+            f"{rf['step_lower_bound_s']*1e3:.1f}",
+        ))
+    widths = [max(len(str(row[i])) for row in rows)
+              for i in range(len(hdr))]
+    lines = []
+    for i, row in enumerate(rows):
+        lines.append(" | ".join(str(c).ljust(w) for c, w in
+                                zip(row, widths)))
+        if i == 0:
+            lines.append("-+-".join("-" * w for w in widths))
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="results/dryrun.json")
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--md", default=None)
+    args = ap.parse_args()
+    with open(args.json) as f:
+        results = json.load(f)
+    table = fmt_table(results, args.mesh)
+    print(table)
+    if args.md:
+        with open(args.md, "w") as f:
+            f.write("```\n" + table + "\n```\n")
+
+
+if __name__ == "__main__":
+    main()

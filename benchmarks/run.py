@@ -1,0 +1,44 @@
+"""Run every paper-table benchmark; print ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="trim grids for a quick pass")
+    args, _ = ap.parse_known_args()
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+
+    from benchmarks import (bench_als, bench_contract, bench_grad_compress,
+                            bench_kron, bench_rtpm, bench_trl)
+
+    if args.fast:
+        bench_rtpm.run(I=40, Js=(400,), table2=False)
+        bench_als.run(I=40, Js=(800,), D=4, iters=8)
+        bench_trl.run(crs=(20, 100), n_train=512, n_test=256)
+        bench_kron.run(crs=(4, 16), D=8)
+        bench_contract.run(crs=(4, 16), D=8)
+        bench_grad_compress.run(dims=1 << 18, ratios=(16,))
+    else:
+        bench_rtpm.run()
+        bench_als.run()
+        bench_trl.run()
+        bench_kron.run()
+        bench_contract.run()
+        bench_grad_compress.run()
+
+    print(f"# total benchmark wall time: {time.time()-t0:.1f}s",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

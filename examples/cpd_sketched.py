@@ -1,0 +1,30 @@
+"""FCS-accelerated CP decomposition (the paper's flagship application):
+decompose a noisy low-rank tensor with plain vs TS vs FCS RTPM.
+
+  PYTHONPATH=src python examples/cpd_sketched.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.cpd.rtpm import cp_reconstruct, rtpm_decompose
+
+key = jax.random.PRNGKey(0)
+I, R = 50, 8
+Q, _ = jnp.linalg.qr(jax.random.normal(key, (I, I)))
+U = Q[:, :R]
+T_clean = jnp.einsum("ar,br,cr->abc", U, U, U)
+T = T_clean + 0.01 * jax.random.normal(key, (I, I, I))
+nc = float(jnp.linalg.norm(T_clean))
+
+print(f"symmetric CP rank-{R} tensor, {I}^3, sigma=0.01")
+for method, J, D in (("plain", 0, 0), ("ts", 800, 10), ("fcs", 800, 10)):
+    t0 = time.time()
+    lams, Uh = rtpm_decompose(T, R, jax.random.PRNGKey(1), method=method,
+                              hash_len=J, n_sketches=max(D, 1),
+                              n_inits=12, n_iters=15)
+    rr = float(jnp.linalg.norm(T_clean - cp_reconstruct(lams, Uh)) / nc)
+    print(f"  {method:6s} J={J:4d} D={D:2d}: clean-residual {rr:.4f} "
+          f"({time.time()-t0:.1f}s)")
+print("expected ordering: plain < fcs <= ts (Prop. 1)")

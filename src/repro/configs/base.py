@@ -1,0 +1,242 @@
+"""Config system for sketchtrax.
+
+Every assigned architecture gets one module in this package exporting
+``CONFIG: ModelConfig``.  ``repro.configs.registry`` maps ``--arch`` ids to
+them.  Configs are plain frozen dataclasses so they can be hashed into jit
+static args and serialized into checkpoints.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Sketch (paper technique) configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SketchConfig:
+    """Fast-Count-Sketch settings for framework integration points.
+
+    ``head_mode_hash_len``: per-mode hash length J_n used when sketching the
+    LM head weight (treated as an order-2 tensor (d_model, vocab)).  The
+    sketched dim is J~ = sum(J_n) - N + 1.
+    ``grad_hash_ratio``: target compression ratio for FCS gradient
+    compression on the pod axis (sketch length ~= numel / ratio).
+    ``num_sketches``: D independent sketches (median combine).
+    """
+
+    sketched_head: bool = False
+    head_hash_len: int = 4096
+    grad_compression: bool = False
+    grad_hash_ratio: int = 16
+    num_sketches: int = 1
+    seed: int = 1234
+
+
+# ---------------------------------------------------------------------------
+# Model configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 0
+    top_k: int = 0
+    num_shared_experts: int = 0
+    expert_d_ff: int = 0
+    group_size: int = 128          # GShard dispatch group (tokens)
+    capacity_factor: float = 1.5
+    router_aux_weight: float = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 64
+    expand: int = 2
+    head_dim: int = 64
+    chunk: int = 256
+    conv_width: int = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    # xLSTM[m:s] block pattern: each group = `m_per_group` mLSTM blocks
+    # followed by `s_per_group` sLSTM blocks.
+    m_per_group: int = 7
+    s_per_group: int = 1
+    proj_factor_m: float = 2.0
+    proj_factor_s: float = 4.0 / 3.0
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridConfig:
+    # Zamba2-style: `mamba_per_group` Mamba2 layers then one application of a
+    # shared transformer block; `num_shared_blocks` distinct shared blocks
+    # used round-robin.
+    mamba_per_group: int = 6
+    num_shared_blocks: int = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // num_heads
+    act: str = "silu"                # silu | gelu
+    rope_theta: float = 10_000.0
+    qkv_bias: bool = False
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    # sub-config blocks (None for families that don't use them)
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    xlstm: Optional[XLSTMConfig] = None
+    hybrid: Optional[HybridConfig] = None
+    sketch: SketchConfig = SketchConfig()
+    # frontend stub for [audio]/[vlm]: train/prefill consume precomputed
+    # frame/patch embeddings instead of token ids.
+    frontend: str = "none"           # none | audio_stub | vision_stub
+    # True when decode with a 500k context is architecturally sane
+    # (sub-quadratic / constant-state sequence mixing).
+    supports_long_context: bool = False
+    # source citation for the config
+    source: str = ""
+
+    # ------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded to a multiple of 256 (Megatron-style) so the head is
+        evenly shardable over a 16-way model axis with 128-lane alignment."""
+        return int(math.ceil(self.vocab_size / 256) * 256)
+
+    # ------------------------------------------------------------------
+    def param_count(self) -> int:
+        """Exact parameter count of the model as implemented (total)."""
+        d, v = self.d_model, self.padded_vocab
+        hd = self.resolved_head_dim
+        n = 0
+        n += v * d                                # embedding
+        if not self.tie_embeddings:
+            n += v * d                            # head
+        n += d                                    # final norm
+        per_layer = self._block_param_count()
+        n += per_layer
+        return n
+
+    def active_param_count(self) -> int:
+        """Active parameters per token (MoE: only routed-in experts)."""
+        if self.family != "moe" or self.moe is None:
+            return self.param_count()
+        d = self.d_model
+        m = self.moe
+        total = self.param_count()
+        # subtract inactive routed experts
+        expert_params = 3 * d * m.expert_d_ff
+        inactive = (m.num_experts - m.top_k) * expert_params * self.num_layers
+        return total - inactive
+
+    def _block_param_count(self) -> int:
+        d = self.d_model
+        hd = self.resolved_head_dim
+        H, K = self.num_heads, self.num_kv_heads
+        attn = d * H * hd + 2 * d * K * hd + H * hd * d
+        if self.qkv_bias:
+            attn += (H + 2 * K) * hd
+        ffn_glu = 3 * d * self.d_ff
+        norms = 2 * d
+        L = self.num_layers
+        if self.family in ("dense", "audio", "vlm"):
+            return L * (attn + ffn_glu + norms)
+        if self.family == "moe":
+            m = self.moe
+            router = d * m.num_experts
+            experts = m.num_experts * 3 * d * m.expert_d_ff
+            shared = m.num_shared_experts * 3 * d * m.expert_d_ff
+            return L * (attn + router + experts + shared + norms)
+        if self.family == "ssm":
+            x = self.xlstm
+            gm = x.m_per_group + x.s_per_group
+            n_groups = L // gm
+            dm = int(d * x.proj_factor_m)
+            # mLSTM block: up-proj (2x for gate), qkv projections on inner dim,
+            # i/f/o gate projections, down-proj, norms
+            mlstm = (2 * d * dm) + 3 * dm * (dm // self.num_heads) * self.num_heads \
+                + 3 * dm * self.num_heads + dm * d + 2 * d + 2 * dm
+            ds = int(d * x.proj_factor_s)
+            # sLSTM: 4 gates x (input proj + recurrent per-head proj) + FFN-ish up/down
+            slstm = 4 * (d * d + self.num_heads * (d // self.num_heads) ** 2) \
+                + 2 * d * ds + ds * d + 2 * d
+            return n_groups * (x.m_per_group * mlstm + x.s_per_group * slstm)
+        if self.family == "hybrid":
+            hb = self.hybrid
+            s = self.ssm
+            di = s.expand * d
+            nheads = di // s.head_dim
+            # mamba2 block params
+            mamba = d * (2 * di + 2 * s.d_state + nheads) + s.conv_width * (di + 2 * s.d_state) \
+                + nheads + nheads + di * d + d + di
+            shared_blk = (d * self.num_heads * hd + 2 * d * self.num_kv_heads * hd
+                          + self.num_heads * hd * d + 3 * d * self.d_ff + 2 * d)
+            return L * mamba + hb.num_shared_blocks * shared_blk
+        raise ValueError(self.family)
+
+    def flops_per_token(self, seq_len: int, training: bool) -> float:
+        """Model FLOPs per token: 6*N_active (train) or 2*N_active (fwd),
+        plus attention score FLOPs where applicable."""
+        n = self.active_param_count()
+        base = (6.0 if training else 2.0) * n
+        # causal attention term: 2 * 2 * hd * H * S/2 per token per layer
+        hd = self.resolved_head_dim
+        if self.family in ("dense", "audio", "vlm", "moe"):
+            attn_layers = self.num_layers
+        elif self.family == "hybrid":
+            attn_layers = self.num_layers // self.hybrid.mamba_per_group
+        else:
+            attn_layers = 0
+        attn = attn_layers * 2 * 2 * self.num_heads * hd * (seq_len / 2)
+        if training:
+            attn *= 3
+        return base + attn
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned shape set for LM-family transformers)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                        # train | prefill | decode
+
+
+SHAPES: Tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", 4_096, 256, "train"),
+    ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    ShapeConfig("long_500k", 524_288, 1, "decode"),
+)
+
+SHAPE_BY_NAME = {s.name: s for s in SHAPES}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> bool:
+    """long_500k only runs for sub-quadratic sequence mixers (SSM/hybrid)."""
+    if shape.name == "long_500k":
+        return cfg.supports_long_context
+    return True

@@ -1,0 +1,66 @@
+"""Architecture registry: ``--arch <id>`` resolution."""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict
+
+from repro.configs.base import ModelConfig
+
+_ARCH_MODULES = {
+    "granite-moe-3b-a800m": "repro.configs.granite_moe_3b_a800m",
+    "deepseek-moe-16b": "repro.configs.deepseek_moe_16b",
+    "musicgen-medium": "repro.configs.musicgen_medium",
+    "yi-9b": "repro.configs.yi_9b",
+    "gemma-2b": "repro.configs.gemma_2b",
+    "minitron-4b": "repro.configs.minitron_4b",
+    "qwen2.5-32b": "repro.configs.qwen2_5_32b",
+    "xlstm-1.3b": "repro.configs.xlstm_1_3b",
+    "internvl2-2b": "repro.configs.internvl2_2b",
+    "zamba2-2.7b": "repro.configs.zamba2_2_7b",
+}
+
+ARCH_IDS = tuple(_ARCH_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(_ARCH_MODULES[arch]).CONFIG
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}
+
+
+# ---------------------------------------------------------------------------
+# Reduced configs for CPU smoke tests: same family/topology, tiny dims.
+# ---------------------------------------------------------------------------
+
+
+def reduced_config(arch: str) -> ModelConfig:
+    cfg = get_config(arch)
+    changes: dict = dict(
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=max(1, min(cfg.num_kv_heads, 2)),
+        head_dim=16,
+        d_ff=128 if cfg.d_ff else 0,
+        vocab_size=512,
+    )
+    if cfg.family == "moe":
+        changes["num_layers"] = 2
+        changes["moe"] = dataclasses.replace(
+            cfg.moe, num_experts=8, top_k=2, expert_d_ff=64, group_size=32,
+            num_shared_experts=min(cfg.moe.num_shared_experts, 1))
+    elif cfg.family == "ssm":
+        changes["num_layers"] = cfg.xlstm.m_per_group + cfg.xlstm.s_per_group
+        changes["num_heads"] = 2
+        changes["num_kv_heads"] = 2
+    elif cfg.family == "hybrid":
+        changes["num_layers"] = 2 * cfg.hybrid.mamba_per_group
+        changes["ssm"] = dataclasses.replace(cfg.ssm, d_state=16, head_dim=16,
+                                             chunk=16)
+    else:
+        changes["num_layers"] = 2
+    return dataclasses.replace(cfg, **changes)

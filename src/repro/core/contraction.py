@@ -1,0 +1,161 @@
+"""Sketched tensor-contraction approximations (paper Section 3.3/4.3).
+
+  T(u,u,u)   ~= < FCS(T), FCS(u o u o u) >                         (Eq. 16)
+  T(I,u,u)_i ~= s_1(i) * z[h_1(i)],                                 (Eq. 17)
+      z = irfft( rfft(FCS(T)) * conj(rfft(CS_2(u), J~))
+                               * conj(rfft(CS_3(u), J~)) )
+  (z is u-dependent but i-independent -> computed once per power iteration)
+
+plus the Kronecker-product (Section 4.3.1) and mode-contraction
+(Section 4.3.2) compress/decompress rules, and TS equivalents for the
+paper's comparisons.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.count_sketch import cs_apply
+from repro.core.hashes import ModeHash, fcs_sketch_len
+from repro.core.sketches import fcs_cp, ts_cp
+
+
+# ---------------------------------------------------------------------------
+# T(u, u, u)
+# ---------------------------------------------------------------------------
+
+
+def fcs_tuuu(sk_T: jax.Array, u: jax.Array,
+             hashes: Sequence[ModeHash]) -> jax.Array:
+    """<FCS(T), FCS(u o u o u)> per repetition: (D,)."""
+    lam = jnp.ones((1,), u.dtype)
+    sk_u = fcs_cp(lam, [u[:, None]] * len(hashes), hashes)
+    return jnp.sum(sk_T * sk_u, axis=-1)
+
+
+def ts_tuuu(sk_T: jax.Array, u: jax.Array,
+            hashes: Sequence[ModeHash]) -> jax.Array:
+    lam = jnp.ones((1,), u.dtype)
+    sk_u = ts_cp(lam, [u[:, None]] * len(hashes), hashes)
+    return jnp.sum(sk_T * sk_u, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# T(I, u, u)
+# ---------------------------------------------------------------------------
+
+
+def fcs_tiuu(sk_T: jax.Array, u: jax.Array,
+             hashes: Sequence[ModeHash]) -> jax.Array:
+    """Eq. 17.  sk_T: (D, J~).  Returns per-repetition estimates (D, I_1)."""
+    Jt = sk_T.shape[-1]
+    mh1, mh2, mh3 = hashes
+    cs2 = cs_apply(u, mh2)                       # (D, J2)
+    cs3 = cs_apply(u, mh3)                       # (D, J3)
+    f = (jnp.fft.rfft(sk_T, n=Jt, axis=-1)
+         * jnp.conj(jnp.fft.rfft(cs2, n=Jt, axis=-1))
+         * jnp.conj(jnp.fft.rfft(cs3, n=Jt, axis=-1)))
+    z = jnp.fft.irfft(f, n=Jt, axis=-1)          # (D, J~)
+
+    def one(zd, h, s):
+        return s * zd[h]
+    return jax.vmap(one)(z, mh1.h, mh1.s)        # (D, I1)
+
+
+def ts_tiuu(sk_T: jax.Array, u: jax.Array,
+            hashes: Sequence[ModeHash]) -> jax.Array:
+    """TS analogue (Wang et al. 2015): circular correlation, mod-J lookup."""
+    J = sk_T.shape[-1]
+    mh1, mh2, mh3 = hashes
+    cs2 = cs_apply(u, mh2)
+    cs3 = cs_apply(u, mh3)
+    f = (jnp.fft.rfft(sk_T, n=J, axis=-1)
+         * jnp.conj(jnp.fft.rfft(cs2, n=J, axis=-1))
+         * jnp.conj(jnp.fft.rfft(cs3, n=J, axis=-1)))
+    z = jnp.fft.irfft(f, n=J, axis=-1)
+
+    def one(zd, h, s):
+        return s * zd[h % J]
+    return jax.vmap(one)(z, mh1.h, mh1.s)
+
+
+# ---------------------------------------------------------------------------
+# Kronecker-product compression (Section 4.3.1)
+# ---------------------------------------------------------------------------
+
+
+def fcs_kron_compress(A: jax.Array, B: jax.Array,
+                      hashes: Sequence[ModeHash]) -> jax.Array:
+    """FCS(A (x) B) from the factors: convolve the two 2-mode FCS sketches.
+    hashes = (h1..h4) for (rows(A), cols(A), rows(B), cols(B)).
+    Returns (D, J~), J~ = sum J_n - 3."""
+    from repro.core.sketches import fcs_general
+    Jt = fcs_sketch_len([mh.J for mh in hashes])
+    skA = fcs_general(A, hashes[:2])             # (D, J1+J2-1)
+    skB = fcs_general(B, hashes[2:])             # (D, J3+J4-1)
+    f = (jnp.fft.rfft(skA, n=Jt, axis=-1)
+         * jnp.fft.rfft(skB, n=Jt, axis=-1))
+    return jnp.fft.irfft(f, n=Jt, axis=-1)
+
+
+def fcs_kron_decompress(sk: jax.Array, hashes: Sequence[ModeHash],
+                        shapeA: Tuple[int, int], shapeB: Tuple[int, int]
+                        ) -> jax.Array:
+    """Median-of-D estimate of A (x) B (I1*I3, I2*I4)."""
+    mh1, mh2, mh3, mh4 = hashes
+    I1, I2 = shapeA
+    I3, I4 = shapeB
+
+    def one(d):
+        pos = (mh1.h[d][:, None, None, None] + mh2.h[d][None, :, None, None]
+               + mh3.h[d][None, None, :, None] + mh4.h[d][None, None, None, :])
+        sign = (mh1.s[d][:, None, None, None] * mh2.s[d][None, :, None, None]
+                * mh3.s[d][None, None, :, None] * mh4.s[d][None, None, None, :])
+        est = sign * sk[d][pos]                  # (I1, I2, I3, I4)
+        return est
+    est = jax.lax.map(one, jnp.arange(mh1.D))
+    est = jnp.median(est, axis=0)
+    # (i1, i2, i3, i4) -> Kron layout (I3(i1-1)+i3, I4(i2-1)+i4)
+    return est.transpose(0, 2, 1, 3).reshape(I1 * I3, I2 * I4)
+
+
+# ---------------------------------------------------------------------------
+# Mode-contraction compression (Section 4.3.2): A (I1,I2,L) x_3,1 B (L,I3,I4)
+# ---------------------------------------------------------------------------
+
+
+def fcs_contraction_compress(A: jax.Array, B: jax.Array,
+                             hashes: Sequence[ModeHash],
+                             l_chunk: int = 8) -> jax.Array:
+    """FCS(A o_{3,1} B) = sum_l conv(FCS(A[:,:,l]), FCS(B[l])) — computed in
+    the frequency domain with the sum over l inside (one irfft total)."""
+    from repro.core.sketches import fcs_general
+    Jt = fcs_sketch_len([mh.J for mh in hashes])
+    L = A.shape[-1]
+
+    def one_l(l):
+        skA = fcs_general(A[:, :, l], hashes[:2])
+        skB = fcs_general(B[l], hashes[2:])
+        return (jnp.fft.rfft(skA, n=Jt, axis=-1)
+                * jnp.fft.rfft(skB, n=Jt, axis=-1))
+
+    f = jax.lax.map(one_l, jnp.arange(L)).sum(axis=0)
+    return jnp.fft.irfft(f, n=Jt, axis=-1)
+
+
+def fcs_contraction_decompress(sk: jax.Array, hashes: Sequence[ModeHash],
+                               shape: Tuple[int, int, int, int]) -> jax.Array:
+    """Median-of-D estimate of the (I1, I2, I3, I4) contraction result."""
+    mh = hashes
+    I1, I2, I3, I4 = shape
+
+    def one(d):
+        pos = (mh[0].h[d][:, None, None, None] + mh[1].h[d][None, :, None, None]
+               + mh[2].h[d][None, None, :, None] + mh[3].h[d][None, None, None, :])
+        sign = (mh[0].s[d][:, None, None, None] * mh[1].s[d][None, :, None, None]
+                * mh[2].s[d][None, None, :, None] * mh[3].s[d][None, None, None, :])
+        return sign * sk[d][pos]
+    est = jax.lax.map(one, jnp.arange(mh[0].D))
+    return jnp.median(est, axis=0)

@@ -1,0 +1,61 @@
+"""Count Sketch (Charikar et al. 2002) — Definition 1.
+
+CS(x; h, s)_j = sum_{h(i)=j} s(i) x(i): a signed random projection computed
+in O(nnz(x)) by scatter-add.  On TPU the scatter is reformulated as a blocked
+signed-one-hot matmul (see repro.kernels.count_sketch); this module is the
+jnp reference used everywhere correctness matters.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashes import ModeHash
+
+
+def cs_apply(x: jax.Array, mh: ModeHash) -> jax.Array:
+    """x: (I,) -> (D, J)."""
+    def one(h, s):
+        return jnp.zeros((mh.J,), x.dtype).at[h].add(s.astype(x.dtype) * x)
+    return jax.vmap(one)(mh.h, mh.s)
+
+
+def cs_apply_cols(X: jax.Array, mh: ModeHash) -> jax.Array:
+    """Column-wise CS of a matrix: X (I, R) -> (D, J, R)."""
+    def one(h, s):
+        return jnp.zeros((mh.J, X.shape[1]), X.dtype).at[h].add(
+            s[:, None].astype(X.dtype) * X)
+    return jax.vmap(one)(mh.h, mh.s)
+
+
+def cs_apply_batch(X: jax.Array, mh: ModeHash) -> jax.Array:
+    """Row-batched CS: X (..., I) -> (D, ..., J)."""
+    def one(h, s):
+        sx = X * s.astype(X.dtype)
+        out = jnp.zeros(X.shape[:-1] + (mh.J,), X.dtype)
+        return out.at[..., h].add(sx)  # scatter along last axis
+
+    # scatter with duplicate indices along the last axis: use one-hot matmul
+    # for correctness (at[..., h] would not reduce duplicates the way we
+    # want for all backends), J assumed modest here.
+    def one_matmul(h, s):
+        onehot = (jax.nn.one_hot(h, mh.J, dtype=X.dtype)
+                  * s[:, None].astype(X.dtype))
+        return X @ onehot
+    return jax.vmap(one_matmul)(mh.h, mh.s)
+
+
+def cs_unsketch(y: jax.Array, mh: ModeHash) -> jax.Array:
+    """Decompress: x_hat(i) = median_d s_d(i) * y_d[h_d(i)].  y: (D, J) ->
+    (I,) after the median over D."""
+    def one(yd, h, s):
+        return s * yd[h]
+    est = jax.vmap(one)(y, mh.h, mh.s)          # (D, I)
+    return jnp.median(est, axis=0)
+
+
+def cs_unsketch_at(y: jax.Array, mh: ModeHash, idx: jax.Array) -> jax.Array:
+    """Decompress selected indices only."""
+    def one(yd, h, s):
+        return s[idx] * yd[h[idx]]
+    return jnp.median(jax.vmap(one)(y, mh.h, mh.s), axis=0)

@@ -1,0 +1,14 @@
+"""Median-of-D combination (the paper computes D independent sketches and
+returns the median for robustness, backed by Cor. 1's Chebyshev argument)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def median_combine(estimates, axis: int = 0):
+    """Median over the D axis of per-repetition estimates."""
+    return jnp.median(estimates, axis=axis)
+
+
+def mean_combine(estimates, axis: int = 0):
+    return jnp.mean(estimates, axis=axis)

@@ -1,0 +1,106 @@
+"""2-wise independent hash families for sketching.
+
+The paper's headline storage win: FCS/TS/HCS keep one short hash pair per
+mode — O(sum I_n) — instead of CS's O(prod I_n) pair on vec(T).
+
+We use the affine-mod-prime family h(i) = ((a*i + b) mod p) mod J with
+p = 2^31 - 1 (Mersenne), which is 2-wise independent, so Prop. 1 / Cor. 1 of
+the paper apply.  Each hash is stored BOTH as (a, b) coefficients (evaluated
+on the fly inside Pallas kernels — 8 bytes instead of 4*I) and as a
+tabulated int32 array (for gather/scatter formulations).  D independent
+repetitions stack on a leading axis.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PRIME = 2_147_483_647  # 2^31 - 1
+
+
+class ModeHash(NamedTuple):
+    """Hash pair (h: [I] -> [J], s: [I] -> {+-1}) x D repetitions."""
+    h: jax.Array        # (D, I) int32 in [0, J)
+    s: jax.Array        # (D, I) float32 in {+1, -1}
+    coeffs: jax.Array   # (D, 4) uint64: (ah, bh, as_, bs)
+    J: int
+
+    @property
+    def D(self) -> int:
+        return self.h.shape[0]
+
+    @property
+    def I(self) -> int:
+        return self.h.shape[1]
+
+
+def make_mode_hash(key: jax.Array, I: int, J: int, D: int = 1) -> ModeHash:
+    """Tables are generated host-side in numpy uint64 (jax x64 is off in
+    this deployment; the affine products need 62 bits).  Pallas kernels that
+    re-evaluate hashes on the fly use the 16-bit-split trick on ``coeffs``."""
+    import numpy as np
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    ah = np.asarray(jax.random.randint(k1, (D,), 1, PRIME, jnp.int32),
+                    np.uint64)
+    bh = np.asarray(jax.random.randint(k2, (D,), 0, PRIME, jnp.int32),
+                    np.uint64)
+    as_ = np.asarray(jax.random.randint(k3, (D,), 1, PRIME, jnp.int32),
+                     np.uint64)
+    bs = np.asarray(jax.random.randint(k4, (D,), 0, PRIME, jnp.int32),
+                    np.uint64)
+    idx = np.arange(I, dtype=np.uint64)
+    h = (((ah[:, None] * idx[None, :] + bh[:, None]) % PRIME) % J
+         ).astype(np.int32)
+    s = (1.0 - 2.0 * (((as_[:, None] * idx[None, :] + bs[:, None]) % PRIME)
+                      % 2)).astype(np.float32)
+    coeffs = np.stack([ah, bh, as_, bs], axis=-1).astype(np.int64)
+    return ModeHash(h=jnp.asarray(h), s=jnp.asarray(s),
+                    coeffs=jnp.asarray(coeffs.astype(np.float64) % 2**31,
+                                       jnp.int32), J=J)
+
+
+def make_tensor_hashes(key: jax.Array, dims: Sequence[int],
+                       Js: Sequence[int] | int, D: int = 1
+                       ) -> Tuple[ModeHash, ...]:
+    """One ModeHash per tensor mode."""
+    if isinstance(Js, int):
+        Js = [Js] * len(dims)
+    keys = jax.random.split(key, len(dims))
+    return tuple(make_mode_hash(k, I, J, D)
+                 for k, I, J in zip(keys, dims, Js))
+
+
+def fcs_sketch_len(Js: Sequence[int]) -> int:
+    """J~ = sum_n J_n - N + 1 (length of the linear-convolution sketch)."""
+    return int(sum(Js) - len(Js) + 1)
+
+
+def combined_fcs_hash(hashes: Sequence[ModeHash]) -> Tuple[jax.Array, jax.Array]:
+    """Materialize the structured long pair (Eq. 7) on the full index grid
+    (row-major / last mode fastest, matching ``T.reshape(-1)``) — ONLY for
+    tests/small tensors; production code never builds this (that's the
+    point of the paper)."""
+    D = hashes[0].D
+    N = len(hashes)
+    h_tot: jax.Array = jnp.zeros((D,) + (1,) * N, jnp.int32)
+    s_tot: jax.Array = jnp.ones((D,) + (1,) * N, jnp.float32)
+    for n, mh in enumerate(hashes):
+        bshape = (D,) + tuple(mh.I if m == n else 1 for m in range(N))
+        h_tot = h_tot + mh.h.reshape(bshape)
+        s_tot = s_tot * mh.s.reshape(bshape)
+    return h_tot.reshape(D, -1), s_tot.reshape(D, -1)
+
+
+def storage_bytes_tabulated(hashes: Sequence[ModeHash]) -> int:
+    """Hash memory if stored as tables (paper's Figs. 5/6 metric)."""
+    return sum(mh.h.size * 4 + mh.s.size * 4 for mh in hashes)
+
+
+def storage_bytes_cs_long(dims: Sequence[int], D: int) -> int:
+    """What CS on vec(T) would need: one pair of length prod(dims)."""
+    n = 1
+    for d in dims:
+        n *= d
+    return n * D * 8

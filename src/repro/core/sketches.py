@@ -1,0 +1,172 @@
+"""TS (Def. 2), HCS (Def. 3) and FCS (Def. 4) for general tensors and for
+CP-form tensors (FFT fast paths).
+
+Layout conventions: mode order follows tensor axes; all sketches carry a
+leading D axis (independent repetitions, median-combined by estimators.py).
+
+General-tensor path ("mode folding"): sketch mode n, then shift-accumulate
+by h_n — O(nnz(T)) per mode without ever materializing the combined hash:
+
+    TS : circular shifts, output length J (mod-J wraparound)
+    FCS: linear shifts, output length J~ = sum J_n - N + 1 (no wraparound —
+         the spatial offsets survive, which is exactly the paper's accuracy
+         argument vs TS)
+    HCS: independent per-mode CS -> (D, J_1, ..., J_N)
+
+CP-form path (Eqs. 3, 5, 8): per-mode CS of the factor columns, then
+FFT-domain products: circular J-point (TS) / zero-padded J~-point (FCS) /
+materialized outer product (HCS — the expensive one, Eq. 5).
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.count_sketch import cs_apply, cs_apply_cols
+from repro.core.hashes import ModeHash, fcs_sketch_len
+
+
+# ---------------------------------------------------------------------------
+# General tensors
+# ---------------------------------------------------------------------------
+
+
+def _sketch_general(T: jax.Array, hashes: Sequence[ModeHash],
+                    circular: bool) -> jax.Array:
+    """One flat scatter-add per repetition d: position(i_1..i_N) =
+    sum_n h_n(i_n) (mod J for TS), sign = prod_n s_n(i_n).  The combined
+    hash values are broadcast-computed on the fly — O(nnz(T)) work and no
+    stored long hash pair.  lax.map over D keeps the index grid to one
+    repetition at a time."""
+    N = T.ndim
+    D = hashes[0].D
+    Js = [mh.J for mh in hashes]
+    out_len = Js[0] if circular else fcs_sketch_len(Js)
+
+    def one(d):
+        pos = jnp.zeros((1,) * N, jnp.int32)
+        sign = jnp.ones((1,) * N, T.dtype)
+        for n, mh in enumerate(hashes):
+            bshape = tuple(mh.I if m == n else 1 for m in range(N))
+            pos = pos + mh.h[d].reshape(bshape)
+            sign = sign * mh.s[d].reshape(bshape).astype(T.dtype)
+        if circular:
+            pos = pos % out_len
+        flat = (sign * T).reshape(-1)
+        return jnp.zeros((out_len,), T.dtype).at[pos.reshape(-1)].add(flat)
+
+    return jax.lax.map(one, jnp.arange(D))
+
+
+def ts_general(T: jax.Array, hashes: Sequence[ModeHash]) -> jax.Array:
+    """Tensor Sketch of a dense tensor: (D, J)."""
+    return _sketch_general(T, hashes, circular=True)
+
+
+def fcs_general(T: jax.Array, hashes: Sequence[ModeHash]) -> jax.Array:
+    """Fast Count Sketch of a dense tensor (Eq. 13): (D, J~)."""
+    return _sketch_general(T, hashes, circular=False)
+
+
+def hcs_general(T: jax.Array, hashes: Sequence[ModeHash]) -> jax.Array:
+    """Higher-order Count Sketch (Eq. 4): (D, J_1, ..., J_N)."""
+    D = hashes[0].D
+
+    def one(d):
+        out = T
+        for n, mh in enumerate(hashes):
+            onehot = (jax.nn.one_hot(mh.h[d], mh.J, dtype=T.dtype)
+                      * mh.s[d][:, None].astype(T.dtype))
+            out = jnp.moveaxis(jnp.tensordot(out, onehot, axes=([n], [0])),
+                               -1, n)
+        return out
+    return jax.vmap(one)(jnp.arange(D))
+
+
+# ---------------------------------------------------------------------------
+# CP-form tensors  T = [[lambda; U^(1), ..., U^(N)]]
+# ---------------------------------------------------------------------------
+
+
+def _cs_factors(lam: jax.Array, Us: Sequence[jax.Array],
+                hashes: Sequence[ModeHash]) -> Tuple[jax.Array, ...]:
+    return tuple(cs_apply_cols(U, mh) for U, mh in zip(Us, hashes))
+
+
+def ts_cp(lam: jax.Array, Us: Sequence[jax.Array],
+          hashes: Sequence[ModeHash]) -> jax.Array:
+    """Eq. 3: mode-J circular convolution via J-point FFT.  (D, J)."""
+    J = hashes[0].J
+    sketched = _cs_factors(lam, Us, hashes)         # each (D, J, R)
+    f = jnp.fft.rfft(sketched[0], n=J, axis=1)
+    for sk in sketched[1:]:
+        f = f * jnp.fft.rfft(sk, n=J, axis=1)
+    conv = jnp.fft.irfft(f, n=J, axis=1)            # (D, J, R)
+    return jnp.einsum("djr,r->dj", conv, lam)
+
+
+def fcs_cp(lam: jax.Array, Us: Sequence[jax.Array],
+           hashes: Sequence[ModeHash]) -> jax.Array:
+    """Eq. 8: zero-padded linear convolution via J~-point FFT.  (D, J~)."""
+    Jt = fcs_sketch_len([mh.J for mh in hashes])
+    sketched = _cs_factors(lam, Us, hashes)
+    f = jnp.fft.rfft(sketched[0], n=Jt, axis=1)
+    for sk in sketched[1:]:
+        f = f * jnp.fft.rfft(sk, n=Jt, axis=1)
+    conv = jnp.fft.irfft(f, n=Jt, axis=1)           # (D, J~, R)
+    return jnp.einsum("djr,r->dj", conv, lam)
+
+
+def hcs_cp(lam: jax.Array, Us: Sequence[jax.Array],
+           hashes: Sequence[ModeHash]) -> jax.Array:
+    """Eq. 5: materialized outer product of CS'd factors (the slow one —
+    O(R * prod J_n)).  Supports N in {2, 3, 4}."""
+    sketched = _cs_factors(lam, Us, hashes)
+    N = len(sketched)
+    if N == 2:
+        return jnp.einsum("dar,dbr,r->dab", *sketched, lam)
+    if N == 3:
+        return jnp.einsum("dar,dbr,dcr,r->dabc", *sketched, lam)
+    if N == 4:
+        return jnp.einsum("dar,dbr,dcr,der,r->dabce", *sketched, lam)
+    raise NotImplementedError(N)
+
+
+# ---------------------------------------------------------------------------
+# Decompression (FCS)
+# ---------------------------------------------------------------------------
+
+
+def fcs_decompress_entry(sk: jax.Array, hashes: Sequence[ModeHash],
+                         idx: Sequence[jax.Array]) -> jax.Array:
+    """Recover entries of the original tensor from an FCS sketch (paper
+    Section 4.3 decompression rule).  ``idx``: one integer array per mode,
+    broadcastable to the output shape.  Returns (D, ...) estimates (median
+    over D is the caller's job so error-feedback schemes can see all D)."""
+    D = hashes[0].D
+
+    def one(d):
+        pos = 0
+        sign = 1.0
+        for mh, ix in zip(hashes, idx):
+            pos = pos + mh.h[d][ix]
+            sign = sign * mh.s[d][ix]
+        return sign * sk[d][pos]
+    return jax.vmap(one)(jnp.arange(D))
+
+
+def hcs_decompress_entry(sk: jax.Array, hashes: Sequence[ModeHash],
+                         idx: Sequence[jax.Array]) -> jax.Array:
+    """HCS decompression: element = prod s_n * HCS[h_1(i_1), ..., h_N(i_N)]."""
+    D = hashes[0].D
+
+    def one(d):
+        sign = 1.0
+        gathered = sk[d]
+        for n, (mh, ix) in enumerate(zip(hashes, idx)):
+            sign = sign * mh.s[d][ix]
+        pos = tuple(mh.h[d][ix] for mh, ix in zip(hashes, idx))
+        return sign * gathered[pos]
+    return jax.vmap(one)(jnp.arange(D))

@@ -1,0 +1,119 @@
+"""CP-ALS (Kolda & Bader 2009) — plain and sketched (paper Section 4.1.2).
+
+Each ALS sweep solves, for each mode, the least-squares problem against the
+Khatri-Rao product of the other factors.  The MTTKRP columns are exactly the
+contractions of Eq. 18 — T(I, b_r, c_r) etc. — so the sketched variants
+estimate them with the Eq. 17 trick per rank column.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    ModeHash, cs_apply, fcs_general, fcs_tiuu, make_tensor_hashes,
+    ts_general, ts_tiuu,
+)
+
+
+def _solve(mttkrp: jax.Array, G: jax.Array) -> jax.Array:
+    """mttkrp (I, R) @ pinv(G) with G = (B^T B) * (C^T C)."""
+    return jnp.linalg.solve(G + 1e-6 * jnp.eye(G.shape[0]),
+                            mttkrp.T).T
+
+
+def _mttkrp_plain(T: jax.Array, B: jax.Array, C: jax.Array,
+                  mode: int) -> jax.Array:
+    if mode == 0:
+        return jnp.einsum("abc,br,cr->ar", T, B, C)
+    if mode == 1:
+        return jnp.einsum("abc,ar,cr->br", T, B, C)
+    return jnp.einsum("abc,ar,br->cr", T, B, C)
+
+
+def _mttkrp_sketched(sk: jax.Array, hashes: Sequence[ModeHash],
+                     B: jax.Array, C: jax.Array, mode: int,
+                     circular: bool) -> jax.Array:
+    """Columns r: T(I, b_r, c_r)-style contraction for the given free mode.
+    sk is the (D, J~) FCS (or (D, J) TS) sketch of T."""
+    order = {0: (0, 1, 2), 1: (1, 0, 2), 2: (2, 0, 1)}[mode]
+    mh_free = hashes[order[0]]
+    mh_b, mh_c = hashes[order[1]], hashes[order[2]]
+    Jt = sk.shape[-1]
+
+    fsk = jnp.fft.rfft(sk, n=Jt, axis=-1)
+
+    def col(bc):
+        b, c = bc
+        csb = cs_apply(b, mh_b)
+        csc = cs_apply(c, mh_c)
+        f = (fsk * jnp.conj(jnp.fft.rfft(csb, n=Jt, axis=-1))
+             * jnp.conj(jnp.fft.rfft(csc, n=Jt, axis=-1)))
+        z = jnp.fft.irfft(f, n=Jt, axis=-1)
+        if circular:
+            est = jax.vmap(lambda zd, h, s: s * zd[h % Jt])(
+                z, mh_free.h, mh_free.s)
+        else:
+            est = jax.vmap(lambda zd, h, s: s * zd[h])(z, mh_free.h, mh_free.s)
+        return jnp.median(est, axis=0)
+
+    cols = jax.lax.map(col, (B.T, C.T))               # (R, I_free)
+    return cols.T
+
+
+def als_decompose(T: jax.Array, rank: int, key: jax.Array,
+                  method: str = "plain", hash_len: int = 3000,
+                  n_sketches: int = 10, n_iters: int = 20
+                  ) -> Tuple[jax.Array, list]:
+    """Asymmetric CP decomposition T ~= [[lam; A, B, C]].  Returns
+    (lam (R,), [A, B, C])."""
+    I1, I2, I3 = T.shape
+    kA, kB, kC, kh = jax.random.split(key, 4)
+    # HOSVD init (leading singular vectors of the unfoldings) — avoids the
+    # classic random-init ALS swamp where two columns chase one component.
+    def _hosvd(mode, k, dim):
+        M = jnp.moveaxis(T, mode, 0).reshape(dim, -1)
+        u, _, _ = jnp.linalg.svd(M, full_matrices=False)
+        base = u[:, :rank]
+        if base.shape[1] < rank:
+            base = jnp.pad(base, ((0, 0), (0, rank - base.shape[1])))
+        return base + 0.01 * jax.random.normal(k, (dim, rank))
+    A = _hosvd(0, kA, I1)
+    B = _hosvd(1, kB, I2)
+    C = _hosvd(2, kC, I3)
+
+    sk = None
+    hashes = None
+    circular = method == "ts"
+    if method in ("fcs", "ts"):
+        hashes = make_tensor_hashes(kh, T.shape, hash_len, n_sketches)
+        sk = (fcs_general if method == "fcs" else ts_general)(T, hashes)
+
+    def mttkrp(Bm, Cm, mode):
+        if method == "plain":
+            return _mttkrp_plain(T, Bm, Cm, mode)
+        return _mttkrp_sketched(sk, hashes, Bm, Cm, mode, circular)
+
+    lam = jnp.ones((rank,))
+    for _ in range(n_iters):
+        G = (B.T @ B) * (C.T @ C)
+        A = _solve(mttkrp(B, C, 0), G)
+        A = A / (jnp.linalg.norm(A, axis=0) + 1e-12)
+        G = (A.T @ A) * (C.T @ C)
+        B = _solve(mttkrp(A, C, 1), G)
+        B = B / (jnp.linalg.norm(B, axis=0) + 1e-12)
+        G = (A.T @ A) * (B.T @ B)
+        C = _solve(mttkrp(A, B, 2), G)
+        # A, B are unit-norm when C is solved, so C's column norms carry
+        # the full lambda.
+        lam = jnp.linalg.norm(C, axis=0) + 1e-12
+        C = C / lam
+    return lam, [A, B, C]
+
+
+def als_residual(T: jax.Array, lam: jax.Array, factors: list) -> jax.Array:
+    A, B, C = factors
+    R = jnp.einsum("r,ar,br,cr->abc", lam, A, B, C)
+    return jnp.linalg.norm(T - R) / jnp.linalg.norm(T)

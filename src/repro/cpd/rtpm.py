@@ -1,0 +1,201 @@
+"""Robust Tensor Power Method (Anandkumar et al. 2014) — plain and sketched.
+
+For each rank-1 component: run L random initializations for T power
+iterations u <- T(I,u,u)/||T(I,u,u)||, keep the best by lambda = T(u,u,u),
+deflate, repeat.  The sketched variants replace the two contractions with
+their CS/TS/HCS/FCS estimators (paper Section 4.1.1, Table 1).
+
+The symmetric method is used on symmetric tensors (paper's synthetic
+experiments); ``rtpm_asymmetric`` does alternating rank-1 updates
+(Anandkumar et al. 2014b) for real-world tensors.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    ModeHash, cs_apply, fcs_general, fcs_tiuu, fcs_tuuu, hcs_general,
+    make_tensor_hashes, ts_general, ts_tiuu, ts_tuuu,
+)
+from repro.core.hashes import combined_fcs_hash, fcs_sketch_len
+from repro.core.sketches import hcs_decompress_entry
+
+
+# ---------------------------------------------------------------------------
+# Contraction oracles: given T (or its sketch), return the two contraction
+# functions tiuu(u) -> (I,), tuuu(u) -> scalar.
+# ---------------------------------------------------------------------------
+
+
+def plain_oracle(T: jax.Array):
+    def tiuu(u):
+        return jnp.einsum("abc,b,c->a", T, u, u)
+
+    def tuuu(u):
+        return jnp.einsum("abc,a,b,c->", T, u, u, u)
+    return tiuu, tuuu
+
+
+def fcs_oracle(T: jax.Array, hashes: Sequence[ModeHash]):
+    sk = fcs_general(T, hashes)
+
+    def tiuu(u):
+        return jnp.median(fcs_tiuu(sk, u, hashes), axis=0)
+
+    def tuuu(u):
+        return jnp.median(fcs_tuuu(sk, u, hashes), axis=0)
+    return tiuu, tuuu
+
+
+def ts_oracle(T: jax.Array, hashes: Sequence[ModeHash]):
+    sk = ts_general(T, hashes)
+
+    def tiuu(u):
+        return jnp.median(ts_tiuu(sk, u, hashes), axis=0)
+
+    def tuuu(u):
+        return jnp.median(ts_tuuu(sk, u, hashes), axis=0)
+    return tiuu, tuuu
+
+
+def cs_oracle(T: jax.Array, hashes_long: ModeHash):
+    """Plain CS on vec(T) with a LONG hash pair (the O(prod I_n) storage
+    baseline the paper compares against).  hashes_long: ModeHash over
+    I = prod(dims)."""
+    I = T.shape[0]
+    vec = T.reshape(-1)
+    sk = cs_apply(vec, hashes_long)                    # (D, J)
+
+    def estimate_inner(other_vec):
+        sk2 = cs_apply(other_vec, hashes_long)
+        return jnp.median(jnp.sum(sk * sk2, axis=-1))
+
+    def tiuu(u):
+        outer = jnp.einsum("b,c->bc", u, u).reshape(-1)
+
+        def one(i):
+            e = jnp.zeros((I,)).at[i].set(1.0)
+            return estimate_inner(jnp.einsum("a,b->ab", e, outer).reshape(-1))
+        return jax.lax.map(one, jnp.arange(I))
+
+    def tuuu(u):
+        v = jnp.einsum("a,b,c->abc", u, u, u).reshape(-1)
+        return estimate_inner(v)
+    return tiuu, tuuu
+
+
+def hcs_oracle(T: jax.Array, hashes: Sequence[ModeHash]):
+    """HCS-based contraction (Shi 2019): contract the SKETCHED tensor with
+    CS(u) directly — HCS(T)(I, CS2(u), CS3(u)) then decompress mode 1."""
+    sk = hcs_general(T, hashes)                        # (D, J1, J2, J3)
+    mh1, mh2, mh3 = hashes
+    I = T.shape[0]
+
+    def tiuu(u):
+        c2 = cs_apply(u, mh2)                          # (D, J2)
+        c3 = cs_apply(u, mh3)
+        z = jnp.einsum("dabc,db,dc->da", sk, c2, c3)   # (D, J1)
+        est = jax.vmap(lambda zd, h, s: s * zd[h])(z, mh1.h, mh1.s)
+        return jnp.median(est, axis=0)
+
+    def tuuu(u):
+        c1 = cs_apply(u, mh1)
+        c2 = cs_apply(u, mh2)
+        c3 = cs_apply(u, mh3)
+        return jnp.median(jnp.einsum("dabc,da,db,dc->d", sk, c1, c2, c3))
+    return tiuu, tuuu
+
+
+ORACLES = {
+    "plain": plain_oracle,
+    "fcs": fcs_oracle,
+    "ts": ts_oracle,
+    "cs": cs_oracle,
+    "hcs": hcs_oracle,
+}
+
+
+# ---------------------------------------------------------------------------
+# Symmetric RTPM
+# ---------------------------------------------------------------------------
+
+
+def rtpm(tiuu: Callable, tuuu: Callable, I: int, rank: int, key: jax.Array,
+         n_inits: int = 15, n_iters: int = 20,
+         deflate: Optional[Callable] = None
+         ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (lambdas (rank,), factors (I, rank)).
+
+    ``deflate(tiuu, tuuu, lam, u)`` must return updated oracles; the default
+    subtracts the rank-1 contribution analytically (works for any oracle
+    since the contractions are linear in T)."""
+    lams = []
+    us = []
+
+    def power(u0, tiuu_fn):
+        def step(u, _):
+            v = tiuu_fn(u)
+            return v / (jnp.linalg.norm(v) + 1e-12), None
+        u, _ = jax.lax.scan(step, u0, None, length=n_iters)
+        return u
+
+    cur_tiuu, cur_tuuu = tiuu, tuuu
+    for r in range(rank):
+        key, k1 = jax.random.split(key)
+        inits = jax.random.normal(k1, (n_inits, I))
+        inits = inits / jnp.linalg.norm(inits, axis=1, keepdims=True)
+        cands = jax.lax.map(lambda u0: power(u0, cur_tiuu), inits)
+        vals = jax.lax.map(cur_tuuu, cands)
+        best = jnp.argmax(vals)
+        u = power(cands[best], cur_tiuu)               # a few extra polish iters
+        lam = cur_tuuu(u)
+        lams.append(lam)
+        us.append(u)
+
+        # deflation: T <- T - lam u^3 ; contractions update analytically
+        def make_deflated(prev_tiuu, prev_tuuu, lam=lam, u=u):
+            def d_tiuu(v):
+                return prev_tiuu(v) - lam * u * jnp.dot(u, v) ** 2
+
+            def d_tuuu(v):
+                return prev_tuuu(v) - lam * jnp.dot(u, v) ** 3
+            return d_tiuu, d_tuuu
+
+        cur_tiuu, cur_tuuu = make_deflated(cur_tiuu, cur_tuuu)
+
+    return jnp.stack(lams), jnp.stack(us, axis=1)
+
+
+def rtpm_decompose(T: jax.Array, rank: int, key: jax.Array,
+                   method: str = "plain", hash_len: int = 1000,
+                   n_sketches: int = 2, n_inits: int = 15, n_iters: int = 20
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """End-to-end symmetric CPD of T (I,I,I) via (sketched) RTPM."""
+    I = T.shape[0]
+    if method == "plain":
+        tiuu, tuuu = plain_oracle(T)
+    elif method == "cs":
+        from repro.core import make_mode_hash
+        mh = make_mode_hash(key, I ** 3, hash_len, n_sketches)
+        tiuu, tuuu = cs_oracle(T, mh)
+    else:
+        if method == "hcs":
+            Js = [hash_len] * 3
+        else:
+            Js = [hash_len] * 3
+        hashes = make_tensor_hashes(key, T.shape, Js, n_sketches)
+        tiuu, tuuu = ORACLES[method](T, hashes)
+    return rtpm(tiuu, tuuu, I, rank, key, n_inits, n_iters)
+
+
+def cp_reconstruct(lams: jax.Array, U: jax.Array) -> jax.Array:
+    return jnp.einsum("r,ar,br,cr->abc", lams, U, U, U)
+
+
+def residual_norm(T: jax.Array, lams: jax.Array, U: jax.Array) -> jax.Array:
+    R = cp_reconstruct(lams, U)
+    return jnp.linalg.norm(T - R) / jnp.linalg.norm(T)

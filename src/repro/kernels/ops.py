@@ -1,0 +1,39 @@
+"""jit'd public wrappers for the sketching kernels.
+
+On TPU the Pallas kernels run compiled (interpret=False); on this CPU
+container they run in interpret mode, which executes the same kernel body
+per grid cell in Python — bit-identical block semantics, usable for
+correctness validation.  ``use_pallas=False`` falls back to the jnp oracle
+(the fast path on CPU and the reference everywhere).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.count_sketch import count_sketch as _cs_pallas
+from repro.kernels.unsketch import unsketch as _un_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def count_sketch_op(x: jax.Array, h: jax.Array, s: jax.Array, J: int,
+                    use_pallas: bool | None = None) -> jax.Array:
+    """x: (B, I) -> (B, J)."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return _cs_pallas(x, h, s, J, interpret=not _on_tpu())
+    return ref.count_sketch_ref(x, h, s, J)
+
+
+def unsketch_op(y: jax.Array, h: jax.Array, s: jax.Array,
+                use_pallas: bool | None = None) -> jax.Array:
+    """y: (B, J) -> (B, I)."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return _un_pallas(y, h, s, interpret=not _on_tpu())
+    return ref.unsketch_ref(y, h, s)

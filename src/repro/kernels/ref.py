@@ -1,0 +1,19 @@
+"""Pure-jnp oracles for the Pallas kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def count_sketch_ref(x: jax.Array, h: jax.Array, s: jax.Array,
+                     J: int) -> jax.Array:
+    """Batched signed bucket-accumulate.
+    x: (B, I); h: (I,) int32 in [0, J); s: (I,) +-1.  -> (B, J)."""
+    onehot = jax.nn.one_hot(h, J, dtype=x.dtype) * s[:, None].astype(x.dtype)
+    return x @ onehot
+
+
+def unsketch_ref(y: jax.Array, h: jax.Array, s: jax.Array) -> jax.Array:
+    """Batched decompress: out[b, i] = s[i] * y[b, h[i]].
+    y: (B, J); h: (I,); s: (I,).  -> (B, I)."""
+    return y[:, h] * s[None, :].astype(y.dtype)

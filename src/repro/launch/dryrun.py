@@ -1,0 +1,262 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell on the
+production mesh and record memory/cost/collective analysis.
+
+The two lines above MUST stay first: jax locks the device count on first
+init, and only the dry-run wants 512 placeholder devices.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+      --out results/dryrun.json
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES, SHAPE_BY_NAME, shape_applicable
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shardings import build_param_pspecs, cache_pspecs, make_rules
+from repro.models import model as M
+from repro.models.sharding import logical_rules
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             sketch_grads: bool = False, sketched_head: bool = False,
+             extra_tag: str = "", zero1: bool = False) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPE_BY_NAME[shape_name]
+    cell = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind, "tag": extra_tag,
+    }
+    if not shape_applicable(cfg, shape):
+        cell["status"] = "skipped"
+        cell["reason"] = ("long_500k needs sub-quadratic attention; "
+                         f"{arch} is pure full-attention (see DESIGN.md)")
+        return cell
+    if sketch_grads or sketched_head:
+        import dataclasses
+        from repro.configs.base import SketchConfig
+        cfg = dataclasses.replace(cfg, sketch=SketchConfig(
+            sketched_head=sketched_head, grad_compression=sketch_grads))
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules, strategy = make_rules(cfg, shape.kind, shape.name == "long_500k",
+                                 multi_pod, shape.global_batch)
+    cell["strategy"] = strategy
+    specs = M.input_specs(cfg, shape)
+    pspecs = M.param_specs(cfg)
+    param_sh = _named(mesh, build_param_pspecs(cfg, pspecs, rules, strategy))
+    t0 = time.time()
+    try:
+        with mesh, logical_rules(rules):
+            if shape.kind == "train":
+                batch_sh = _named(mesh, jax.tree.map(
+                    lambda x: P(rules["batch"], *([None] * (x.ndim - 1))),
+                    specs["batch"]))
+                if sketch_grads:
+                    from repro.train.grad_compress import (
+                        init_error_feedback, make_compressed_train_step,
+                        make_podwise_compressed_step)
+                    # NOTE: make_podwise_compressed_step (shard_map over
+                    # "pod") pins the sketch-only DCN placement but trips an
+                    # XLA:CPU crash ("Invalid binary instruction opcode
+                    # copy"); the global form is mathematically identical
+                    # (sketch/unsketch are linear) and compiles everywhere.
+                    fn = make_compressed_train_step(cfg)
+                    ef_specs = jax.eval_shape(
+                        lambda: init_error_feedback(
+                            pspecs, cfg.sketch.grad_hash_ratio,
+                            cfg.sketch.seed))
+                    ef_sh = jax.tree.map(
+                        lambda x: NamedSharding(mesh, P(*([None] * x.ndim))),
+                        ef_specs)
+                    jitted = jax.jit(fn, in_shardings=(param_sh, ef_sh,
+                                                       batch_sh),
+                                     out_shardings=(NamedSharding(mesh, P()),
+                                                    param_sh, ef_sh))
+                    lowered = jitted.lower(pspecs, ef_specs, specs["batch"])
+                else:
+                    fn = M.make_train_step(cfg)
+                    jitted = jax.jit(fn, in_shardings=(param_sh, batch_sh),
+                                     out_shardings=(NamedSharding(mesh, P()),
+                                                    param_sh))
+                    lowered = jitted.lower(pspecs, specs["batch"])
+            elif shape.kind == "prefill":
+                fn = M.make_prefill_step(cfg)
+                batch_sh = _named(mesh, jax.tree.map(
+                    lambda x: P(rules["batch"], *([None] * (x.ndim - 1))),
+                    specs["batch"]))
+                jitted = jax.jit(fn, in_shardings=(param_sh, batch_sh))
+                lowered = jitted.lower(pspecs, specs["batch"])
+            else:  # decode
+                fn = M.make_serve_step(cfg)
+                cache_sh = _named(mesh, cache_pspecs(cfg, specs["cache"], rules))
+                tok_sh = NamedSharding(mesh, P(rules["batch"], None))
+                idx_sh = NamedSharding(mesh, P())
+                jitted = jax.jit(fn, in_shardings=(param_sh, cache_sh,
+                                                   tok_sh, idx_sh),
+                                 donate_argnums=(1,))
+                lowered = jitted.lower(pspecs, specs["cache"],
+                                       specs["tokens"], specs["index"])
+            t_lower = time.time() - t0
+            t0 = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time() - t0
+    except Exception as e:  # sharding bug / OOM-at-compile => system bug
+        cell["status"] = "error"
+        cell["error"] = f"{type(e).__name__}: {e}"
+        cell["traceback"] = traceback.format_exc()[-4000:]
+        return cell
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    # trip-count-weighted walk (XLA cost_analysis counts scan bodies once)
+    cost = hlo_analysis.analyze(hlo)
+    coll = {"ici_bytes": cost["ici_bytes"], "dcn_bytes": cost["dcn_bytes"],
+            "per_op": cost["per_op"]}
+    n_dev = 512 if multi_pod else 256
+    flops_dev = cost["flops"]
+    hbm_bytes = cost["hbm_bytes"]
+    hbm_opt = cost.get("hbm_bytes_opt", hbm_bytes)
+    # CPU-backend fusion is far weaker than TPU's: the instruction-level
+    # bound overstates HBM traffic.  The roofline memory term uses the
+    # geometric mean of [fusion-optimistic, instruction-level] bounds;
+    # both endpoints are recorded.
+    hbm_mid = (hbm_bytes * hbm_opt) ** 0.5 if hbm_opt > 0 else hbm_bytes
+    terms = hlo_analysis.roofline_terms(flops_dev, hbm_mid, coll)
+
+    # model FLOPs: 6*N*D train / 2*N*D fwd over ACTIVE params
+    n_params = sum(x.size for x in jax.tree.leaves(pspecs))
+    n_active = n_params
+    if cfg.moe:
+        m = cfg.moe
+        per_expert = 3 * cfg.d_model * m.expert_d_ff
+        n_active -= (m.num_experts - m.top_k) * per_expert * cfg.num_layers
+    tokens = (shape.global_batch * shape.seq_len
+              if shape.kind in ("train", "prefill") else shape.global_batch)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    model_flops = mult * n_active * tokens
+    useful_ratio = model_flops / (flops_dev * n_dev) if flops_dev else 0.0
+
+    cell.update({
+        "status": "ok",
+        "t_lower_s": round(t_lower, 2),
+        "t_compile_s": round(t_compile, 2),
+        "devices": n_dev,
+        "memory": {
+            "argument_bytes_per_device": ma.argument_size_in_bytes,
+            "output_bytes_per_device": ma.output_size_in_bytes,
+            "temp_bytes_per_device": ma.temp_size_in_bytes,
+            "alias_bytes_per_device": ma.alias_size_in_bytes,
+            "peak_bytes_per_device": (ma.argument_size_in_bytes
+                                      + ma.output_size_in_bytes
+                                      + ma.temp_size_in_bytes
+                                      - ma.alias_size_in_bytes),
+        },
+        "cost": {"flops_per_device": flops_dev,
+                 "hbm_bytes_per_device": hbm_mid,
+                 "hbm_bytes_pessimistic": hbm_bytes,
+                 "hbm_bytes_optimistic": hbm_opt,
+                 "xla_flops_unweighted": float(ca.get("flops", 0.0)),
+                 "xla_bytes_unweighted": float(ca.get("bytes accessed", 0.0))},
+        "collectives": {k: v for k, v in coll.items() if k != "per_op"},
+        "collective_ops": coll["per_op"],
+        "roofline": terms,
+        "params_total": int(n_params),
+        "params_active": int(n_active),
+        "model_flops": model_flops,
+        "useful_flops_ratio": useful_ratio,
+    })
+    return cell
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=[s.name for s in SHAPES])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--sketch-grads", action="store_true",
+                    help="FCS gradient compression on the pod axis")
+    ap.add_argument("--sketched-head", action="store_true",
+                    help="FCS-sketched LM head")
+    ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    cells = []
+    archs = ARCH_IDS if args.all or not args.arch else [args.arch]
+    shapes = ([s.name for s in SHAPES] if args.all or not args.shape
+              else [args.shape])
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"], r.get("tag", ""))
+            for r in results if r.get("status") in ("ok", "skipped")}
+
+    for multi_pod in meshes:
+        mesh_name = "2x16x16" if multi_pod else "16x16"
+        for arch in archs:
+            for shape in shapes:
+                key = (arch, shape, mesh_name, args.tag)
+                if key in done:
+                    continue
+                print(f"=== {arch} x {shape} x {mesh_name}"
+                      f"{' [' + args.tag + ']' if args.tag else ''} ===",
+                      flush=True)
+                cell = run_cell(arch, shape, multi_pod,
+                                sketch_grads=args.sketch_grads,
+                                sketched_head=args.sketched_head,
+                                extra_tag=args.tag, zero1=args.zero1)
+                print(json.dumps({k: cell.get(k) for k in
+                                  ("status", "t_compile_s", "error")},
+                                 indent=None), flush=True)
+                if cell["status"] == "ok":
+                    mem = cell["memory"]["peak_bytes_per_device"] / 2**30
+                    rf = cell["roofline"]
+                    print(f"  peak {mem:.2f} GiB/dev | compute {rf['t_compute_s']*1e3:.2f} ms"
+                          f" | memory {rf['t_memory_s']*1e3:.2f} ms"
+                          f" | coll {rf['t_collective_s']*1e3:.2f} ms"
+                          f" | dominant={rf['dominant']}", flush=True)
+                results = [r for r in results
+                           if (r["arch"], r["shape"], r["mesh"],
+                               r.get("tag", "")) != key]
+                results.append(cell)
+                os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+                tmp = args.out + ".tmp"
+                with open(tmp, "w") as f:
+                    json.dump(results, f, indent=1)
+                os.replace(tmp, args.out)
+    n_ok = sum(1 for r in results if r["status"] == "ok")
+    n_skip = sum(1 for r in results if r["status"] == "skipped")
+    n_err = sum(1 for r in results if r["status"] == "error")
+    print(f"DONE: {n_ok} ok, {n_skip} skipped, {n_err} errors -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,126 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Debug helper: compile one cell and attribute HBM/collective traffic to
+jax-level ops (via HLO metadata op_name), trip-count weighted."""
+import argparse
+import re
+from collections import defaultdict
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPE_BY_NAME
+from repro.configs.registry import get_config
+from repro.launch import hlo_analysis as H
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shardings import build_param_pspecs, cache_pspecs, make_rules
+from repro.models import model as M
+from repro.models.sharding import logical_rules
+
+
+def compile_cell(arch, shape_name, multi_pod=False):
+    cfg = get_config(arch)
+    shape = SHAPE_BY_NAME[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules, strategy = make_rules(cfg, shape.kind, shape_name == "long_500k",
+                                 multi_pod, shape.global_batch)
+    specs = M.input_specs(cfg, shape)
+    pspecs = M.param_specs(cfg)
+    named = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
+                                   is_leaf=lambda x: isinstance(x, P))
+    param_sh = named(build_param_pspecs(cfg, pspecs, rules, strategy))
+    with mesh, logical_rules(rules):
+        if shape.kind == "train":
+            fn = M.make_train_step(cfg)
+            batch_sh = named(jax.tree.map(
+                lambda x: P(rules["batch"], *([None] * (x.ndim - 1))),
+                specs["batch"]))
+            comp = jax.jit(fn, in_shardings=(param_sh, batch_sh),
+                           out_shardings=(NamedSharding(mesh, P()), param_sh)
+                           ).lower(pspecs, specs["batch"]).compile()
+        elif shape.kind == "prefill":
+            fn = M.make_prefill_step(cfg)
+            batch_sh = named(jax.tree.map(
+                lambda x: P(rules["batch"], *([None] * (x.ndim - 1))),
+                specs["batch"]))
+            comp = jax.jit(fn, in_shardings=(param_sh, batch_sh)
+                           ).lower(pspecs, specs["batch"]).compile()
+        else:
+            fn = M.make_serve_step(cfg)
+            cache_sh = named(cache_pspecs(cfg, specs["cache"], rules))
+            comp = jax.jit(fn, in_shardings=(
+                param_sh, cache_sh, NamedSharding(mesh, P(rules["batch"], None)),
+                NamedSharding(mesh, P())), donate_argnums=(1,)).lower(
+                pspecs, specs["cache"], specs["tokens"], specs["index"]
+                ).compile()
+    return comp
+
+
+def attribute(hlo, top=25, what="hbm"):
+    hc = H.HloCost(hlo)
+    mult = {hc.entry: 1}
+    changed = True
+    while changed:
+        changed = False
+        for cname, instrs in hc.comps.items():
+            base = mult.get(cname)
+            if base is None:
+                continue
+            for ins in instrs:
+                if ins.op == "while":
+                    tgt = dict(re.findall(r"(condition|body)=%?([\w.\-]+)",
+                                          ins.rest))
+                    t = hc._trip_count(ins.rest, tgt.get("condition", ""))
+                    b = tgt.get("body")
+                    if b and mult.get(b, 0) < base * t:
+                        mult[b] = base * t
+                        changed = True
+                elif ins.op in ("call", "fusion", "custom-call"):
+                    m = re.search(r"(?:to_apply|calls)=%?([\w.\-]+)", ins.rest)
+                    if m and mult.get(m.group(1), 0) < base:
+                        mult[m.group(1)] = base
+                        changed = True
+    agg = defaultdict(float)
+    rows = []
+    for cname, instrs in hc.comps.items():
+        f = mult.get(cname)
+        if not f:
+            continue
+        for ins in instrs:
+            md = re.search(r'op_name="([^"]+)"', ins.rest)
+            name = md.group(1) if md else f"<{ins.op}>"
+            bop = ins.op[:-6] if ins.op.endswith("-start") else ins.op
+            if what == "coll":
+                if bop not in ("all-reduce", "all-gather", "reduce-scatter",
+                               "all-to-all", "collective-permute"):
+                    continue
+                _, ob = H._shape_elems_bytes(ins.type_str)
+                val = H._collective_traffic(bop, ob, H._group_size(ins.rest)) * f
+            else:
+                if ins.op in H._SKIP_BYTES_OPS and ins.op not in ("fusion",
+                                                                  "custom-call"):
+                    continue
+                _, ob = H._shape_elems_bytes(ins.type_str)
+                opb = 0
+                for on in hc._operand_names(ins.rest):
+                    t = hc._types.get((cname, on))
+                    if t:
+                        opb += H._shape_elems_bytes(t)[1]
+                val = (ob + opb) * f
+            rows.append((val, f, ins.op, ins.type_str[:36], name[:100]))
+            agg[name.split("/")[-1][:60]] += val
+    rows.sort(reverse=True)
+    for r in rows[:top]:
+        print(f"{r[0]/2**30:9.2f}GiB x{r[1]:>5} {r[2]:14s} {r[3]:36s} {r[4]}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("arch")
+    ap.add_argument("shape")
+    ap.add_argument("--what", default="hbm", choices=["hbm", "coll"])
+    ap.add_argument("--top", type=int, default=25)
+    args = ap.parse_args()
+    comp = compile_cell(args.arch, args.shape)
+    attribute(comp.as_text(), top=args.top, what=args.what)

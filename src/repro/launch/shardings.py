@@ -1,0 +1,215 @@
+"""PartitionSpec builders for parameter and cache pytrees + per-arch rules.
+
+Two parameter-placement strategies:
+
+  fsdp : every leaf >= 1 MiB shards its largest evenly-divisible dim over
+         ("data", "model") (256-way; pod-replicated on the multi-pod mesh —
+         the cross-pod gradient all-reduce is the FCS-compression target).
+         Used for train/prefill of every arch except xLSTM-tp cases.
+         DeepSeek's 64 experts overlay expert-parallelism: E over "model",
+         second dim over "data".
+  tp   : name-based tensor-parallel map (weight-stationary decode for every
+         arch, and xLSTM train-multi-pod/prefill where context sharding
+         would gather full-width mLSTM KV).
+
+jit input shardings must divide dims evenly; activation-level constraints
+(which may be uneven) live in the model code via repro.models.sharding.shard.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.sharding import MeshAxes, train_rules, decode_rules
+
+MODEL_AXIS = 16
+DATA_AXIS = 16
+
+
+def _last(path) -> str:
+    k = path[-1]
+    return getattr(k, "key", getattr(k, "name", str(k)))
+
+
+def _in_blocks(path) -> bool:
+    return any(getattr(k, "key", None) == "blocks" for k in path)
+
+
+# ---------------------------------------------------------------------------
+# Strategy selection
+# ---------------------------------------------------------------------------
+
+
+def select_strategy(cfg: ModelConfig, kind: str, multi_pod: bool,
+                    global_batch: int = 0) -> str:
+    if kind == "decode":
+        return "tp"
+    if cfg.family == "ssm":
+        # xLSTM: mLSTM KV is full-width, so context (seq) sharding would
+        # all-gather dm-wide tensors -> never fsdp_seq.  When the global
+        # batch covers the whole mesh (train_4k single-pod: 256 = 16x16),
+        # pure batch sharding with FSDP params eliminates the TP boundary
+        # collectives entirely; the sLSTM recurrent-weight HBM traffic per
+        # device is batch-size-independent at fixed global batch, so the
+        # memory term is unchanged (hillclimb B, EXPERIMENTS.md section
+        # Perf).  Otherwise (multi-pod train: 256 < 512; prefill: 32) fall
+        # back to inner-dim TP.
+        if kind == "train" and not multi_pod and global_batch \
+                and global_batch % (DATA_AXIS * MODEL_AXIS) == 0:
+            return "fsdp_batch"
+        return "tp"
+    return "fsdp_seq"
+
+
+def make_rules(cfg: ModelConfig, kind: str, long_context: bool,
+               multi_pod: bool, global_batch: int = 0
+               ) -> Tuple[Dict[str, MeshAxes], str]:
+    ep = bool(cfg.moe) and cfg.moe.num_experts % MODEL_AXIS == 0
+    if kind == "decode":
+        return decode_rules(multi_pod, long_context), "tp"
+    strategy = select_strategy(cfg, kind, multi_pod, global_batch)
+    rules = train_rules(multi_pod, strategy=strategy, expert_parallel=ep)
+    if strategy == "tp" and cfg.num_heads < MODEL_AXIS:
+        rules["heads"] = None
+    return rules, strategy
+
+
+# ---------------------------------------------------------------------------
+# FSDP parameter specs
+# ---------------------------------------------------------------------------
+
+_FSDP_MIN_BYTES = 1 << 20
+
+
+def _fsdp_leaf_spec(path, leaf, cfg: ModelConfig) -> P:
+    name = _last(path)
+    stacked = 1 if _in_blocks(path) else 0
+    shape = leaf.shape[stacked:]
+    nbytes = leaf.size * np.dtype(leaf.dtype).itemsize
+    ep = bool(cfg.moe) and cfg.moe.num_experts % MODEL_AXIS == 0
+    spec = [None] * len(shape)
+    if name.startswith("r") and len(shape) == 3 and shape[0] <= 64:
+        # sLSTM recurrent gate matrices (H, hd, hd): used INSIDE the
+        # per-timestep scan — sharding them inserts a collective every
+        # timestep.  They're ~4 MB each: replicate; their grad all-reduce
+        # happens once per step.
+        return P(*([None] * (stacked + len(shape))))
+    if ep and name in ("we_gate", "we_up", "we_down"):
+        # expert parallel: E over model; FSDP the next divisible dim on data
+        spec[0] = "model"
+        for i in range(1, len(shape)):
+            if shape[i] % DATA_AXIS == 0:
+                spec[i] = "data"
+                break
+    elif nbytes >= _FSDP_MIN_BYTES:
+        # largest dim divisible by 256 over both axes, else by 16 over data
+        cands = [(shape[i], i) for i in range(len(shape))
+                 if shape[i] % (DATA_AXIS * MODEL_AXIS) == 0]
+        if cands:
+            _, i = max(cands)
+            spec[i] = ("data", "model")
+        else:
+            cands = [(shape[i], i) for i in range(len(shape))
+                     if shape[i] % DATA_AXIS == 0]
+            if cands:
+                _, i = max(cands)
+                spec[i] = ("data",)
+    return P(*([None] * stacked + spec))
+
+
+# ---------------------------------------------------------------------------
+# TP parameter specs (name-based)
+# ---------------------------------------------------------------------------
+
+
+def _tp_leaf_spec(path, leaf, cfg: ModelConfig, rules) -> P:
+    name = _last(path)
+    nd = leaf.ndim
+    stacked = 1 if _in_blocks(path) else 0
+    m = "model"
+    v = "model"
+    E = cfg.moe.num_experts if cfg.moe else 0
+    expert_parallel = E > 0 and E % MODEL_AXIS == 0
+    base: Any = None
+    inner = nd - stacked
+    if name == "embed":
+        base = P(v, None)
+    elif name == "head":
+        base = P(None, v)
+    elif name in ("wq", "wk", "wv", "w_gate", "w_up", "ws_gate", "ws_up",
+                  "wz", "wx", "wxb", "wzb", "w_up_g", "wdt"):
+        base = P(None, m)
+    elif name in ("wi", "wf") and inner == 2 and leaf.shape[-1] > 64:
+        base = P(None, m)            # sLSTM gates (d,d); mLSTM (d,H) tiny
+    elif name in ("wo", "w_down", "ws_down", "out_proj"):
+        base = P(m, None)
+    elif name in ("bq", "bk", "bv", "conv_bx", "conv_b"):
+        base = P(m)
+    elif name in ("we_gate", "we_up"):
+        base = P(m, None, None) if expert_parallel else P(None, None, m)
+    elif name == "we_down":
+        base = P(m, None, None) if expert_parallel else P(None, m, None)
+    elif name in ("conv_wx", "conv_w"):
+        base = P(None, m)
+    elif name in ("dt_bias", "A_log", "D") and inner == 1:
+        base = P(m)                  # mamba per-head params (H % 16 == 0)
+    elif name == "norm" and inner == 1 and leaf.shape[-1] % MODEL_AXIS == 0 \
+            and leaf.shape[-1] > cfg.d_model:
+        base = P(m)                  # inner-dim gated norms (mamba/mlstm)
+    elif name.startswith("r") and inner == 3:
+        base = P(None, None, m)      # sLSTM recurrent (H, hd, hd)
+    if base is None:
+        base = P(*([None] * inner))
+    if stacked:
+        base = P(None, *base)
+    if len(base) != nd:
+        base = P(*(list(base) + [None] * (nd - len(base))))
+    return base
+
+
+def build_param_pspecs(cfg: ModelConfig, params_tree, rules,
+                       strategy: str) -> Any:
+    if strategy in ("fsdp_seq", "fsdp_batch"):
+        return jax.tree_util.tree_map_with_path(
+            lambda p, l: _fsdp_leaf_spec(p, l, cfg), params_tree)
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: _tp_leaf_spec(p, l, cfg, rules), params_tree)
+
+
+# ---------------------------------------------------------------------------
+# Cache specs (decode)
+# ---------------------------------------------------------------------------
+
+
+def cache_pspecs(cfg: ModelConfig, cache_tree: Any,
+                 rules: Dict[str, MeshAxes]) -> Any:
+    b = rules.get("batch")
+    ks = rules.get("kv_seq")
+    m = "model" if rules.get("ssm_inner") else None
+
+    def leaf_spec(path, leaf):
+        name = _last(path)
+        nd = leaf.ndim
+        if name in ("k", "v"):              # (L|G, B, S, K, hd)
+            return P(None, b, ks, None, None)
+        if name == "ssm":                   # (L, B, H, N, P)
+            return P(None, b, m, None, None)
+        if name in ("conv_x", "conv_BC"):   # (L, B, cw-1, C)
+            return P(None, b, None, m if name == "conv_x" else None)
+        if name == "C":                     # (n, B, H, hd, hd)
+            return P(None, b, None, m, None)
+        if name == "n":                     # (n, B, H, hd)
+            return P(None, b, None, m)
+        if name == "conv":                  # (n, B, 3, dm)
+            return P(None, b, None, m)
+        if name == "m":                     # (n, B, H)
+            return P(None, b, None)
+        if name in ("c", "h"):              # sLSTM states (n, B, H, hd)
+            return P(None, b, None, m)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_tree)

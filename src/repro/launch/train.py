@@ -1,0 +1,48 @@
+"""Training driver.
+
+  PYTHONPATH=src python -m repro.launch.train --arch yi-9b --steps 100 \
+      --batch 8 --seq 128 [--reduced] [--grad-compression] \
+      [--ckpt-dir /tmp/run1 --resume]
+
+On a real TPU deployment this process runs per host under the production
+mesh (launch/mesh.py); on this container it drives the same step functions
+on the reduced configs.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs.registry import ARCH_IDS, get_config, reduced_config
+from repro.train.loop import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="yi-9b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--crash-at-step", type=int, default=None,
+                    help="failure injection for FT tests")
+    args = ap.parse_args()
+
+    cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    hist = train(cfg, steps=args.steps, batch=args.batch, seq=args.seq,
+                 lr=args.lr, seed=args.seed, ckpt_dir=args.ckpt_dir,
+                 ckpt_every=args.ckpt_every, resume=args.resume,
+                 grad_compression=args.grad_compression or None,
+                 crash_at_step=args.crash_at_step)
+    print(f"FINAL loss={hist.losses[-1]:.4f} steps={len(hist.losses)} "
+          f"stragglers={len(hist.stragglers)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,363 @@
+"""Shared layers: norms, RoPE, GQA/MQA attention (chunked causal + decode),
+GLU FFN, embeddings, (optionally FCS-sketched) LM head.
+
+All layers are pure functions over explicit param pytrees; init_* builders
+mirror the apply functions.  Weights are bf16; softmax / norms / losses
+accumulate in f32.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.sharding import shard
+
+PDTYPE = jnp.bfloat16  # parameter dtype
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def init_rms_norm(d: int) -> jax.Array:
+    return jnp.zeros((d,), PDTYPE)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, n, hd); positions: (S,) or (B, S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos, sin = cos[..., None, :], sin[..., None, :]  # add head axis
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA / MQA)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key: jax.Array, cfg: ModelConfig) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    H, K = cfg.num_heads, cfg.num_kv_heads
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    sd = 1.0 / math.sqrt(d)
+    p = {
+        "wq": (jax.random.normal(k1, (d, H * hd)) * sd).astype(PDTYPE),
+        "wk": (jax.random.normal(k2, (d, K * hd)) * sd).astype(PDTYPE),
+        "wv": (jax.random.normal(k3, (d, K * hd)) * sd).astype(PDTYPE),
+        "wo": (jax.random.normal(k4, (H * hd, d)) / math.sqrt(H * hd)).astype(PDTYPE),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), PDTYPE)
+        p["bk"] = jnp.zeros((K * hd,), PDTYPE)
+        p["bv"] = jnp.zeros((K * hd,), PDTYPE)
+    return p
+
+
+def _project_qkv(p: dict, x: jax.Array, cfg: ModelConfig):
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    H, K = cfg.num_heads, cfg.num_kv_heads
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"])
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = shard(q.reshape(B, S, H, hd), "batch", "seq", "heads", None)
+    k = k.reshape(B, S, K, hd)
+    v = v.reshape(B, S, K, hd)
+    return q, k, v
+
+
+def _gqa_scores_softmax_out(q, k, v, mask, scale):
+    """q: (B,Sq,K,R,hd); k,v: (B,Sk,K,hd); mask: (Sq,Sk) bool or None.
+    Grouped form used on the decode path (reads each KV head once)."""
+    s = jnp.einsum("bqkrh,bskh->bkrqs", q, k).astype(jnp.float32) * scale
+    if mask is not None:
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    return jnp.einsum("bkrqs,bskh->bqkrh", p, v)
+
+
+def causal_attention(p: dict, x: jax.Array, cfg: ModelConfig,
+                     positions: jax.Array, kv_chunk: int = 1024) -> jax.Array:
+    """Full-sequence causal attention: online-softmax (flash-style) over KV
+    chunks, scanned.  Query rows stay fully data/context-sharded — every
+    device participates in every KV-chunk iteration (KV is replicated /
+    all-gathered, which is cheap for GQA), so context sharding of the
+    sequence never serializes the scan.  Per-chunk bodies rematerialize in
+    the backward."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    H, K = cfg.num_heads, cfg.num_kv_heads
+    R = H // K
+    q, k, v = _project_qkv(p, x, cfg)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    # replicate KV at the (small) K-head stage: the context-sharded seq dim
+    # is all-gathered here, BEFORE the R-fold head broadcast
+    k = shard(k, "batch", "kv_seq", None, None)
+    v = shard(v, "batch", "kv_seq", None, None)
+    if R > 1:
+        k = jnp.repeat(k, R, axis=2)
+        v = jnp.repeat(v, R, axis=2)
+    o = _flash_attention(q, k, v, min(kv_chunk, S))
+    o = o.reshape(B, S, H * hd)
+    o = shard(o, "batch", "seq", None)
+    return jnp.einsum("bsh,hd->bsd", o, p["wo"])
+
+
+def _flash_attention(q, k, v, kc):
+    """Online-softmax causal attention.  q,k,v: (B,S,H,hd) (kv already
+    expanded to H heads).  Scans KV chunks of size kc; the causal mask is
+    applied per chunk.  f32 running (max, sum, acc) statistics."""
+    B, S, H, hd = q.shape
+    scale = 1.0 / math.sqrt(hd)
+    pad = (-S) % kc
+    kp, vp = k, v
+    if pad:  # padded keys are masked out by the causal test below
+        kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nk = (S + pad) // kc
+    kg = kp.reshape(B, nk, kc, H, hd).transpose(1, 0, 2, 3, 4)
+    vg = vp.reshape(B, nk, kc, H, hd).transpose(1, 0, 2, 3, 4)
+    q_pos = jnp.arange(S)
+
+    def _pin(m, l, acc):  # keep scan carries on the q/context sharding
+        m = shard(m, "batch", None, "seq")
+        l = shard(l, "batch", None, "seq")
+        acc = shard(acc, "batch", "seq", None, None)
+        return m, l, acc
+
+    @jax.checkpoint
+    def chunk_fn(carry, inp):
+        m, l, acc = carry                       # (B,H,S), (B,H,S), (B,S,H,hd)
+        cj, kj, vj = inp
+        k_pos = cj * kc + jnp.arange(kc)
+        mask = q_pos[:, None] >= k_pos[None, :]              # (S, kc)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kj).astype(jnp.float32) * scale
+        s = jnp.where(mask[None, None], s, -1e30)
+        s = shard(s, "batch", None, "seq", None)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr.transpose(0, 2, 1)[..., None] + jnp.einsum(
+            "bhqk,bkhd->bqhd", p.astype(vj.dtype), vj).astype(jnp.float32)
+        return _pin(m_new, l, acc), None
+
+    m0 = jnp.full((B, H, S), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, H, S), jnp.float32)
+    a0 = jnp.zeros((B, S, H, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(chunk_fn, _pin(m0, l0, a0),
+                                  (jnp.arange(nk), kg, vg))
+    out = acc / jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]
+    return out.astype(q.dtype)
+
+
+def decode_attention(p: dict, x: jax.Array, cfg: ModelConfig,
+                     cache: dict, index: jax.Array) -> Tuple[jax.Array, dict]:
+    """Single-token decode against a KV cache.
+
+    cache: {"k": (B, S_max, K, hd), "v": ...}; ``index`` is the current
+    position (scalar).  Returns (out (B,1,d), updated cache).
+    """
+    B, one, _ = x.shape
+    hd = cfg.resolved_head_dim
+    H, K = cfg.num_heads, cfg.num_kv_heads
+    R = H // K
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    kn = jnp.einsum("bsd,dh->bsh", x, p["wk"])
+    vn = jnp.einsum("bsd,dh->bsh", x, p["wv"])
+    if cfg.qkv_bias:
+        q, kn, vn = q + p["bq"], kn + p["bk"], vn + p["bv"]
+    q = q.reshape(B, 1, H, hd)
+    kn = kn.reshape(B, 1, K, hd)
+    vn = vn.reshape(B, 1, K, hd)
+    pos = jnp.full((1,), index, jnp.int32)
+    q = rope(q, pos, cfg.rope_theta)
+    kn = rope(kn, pos, cfg.rope_theta)
+    k = jax.lax.dynamic_update_slice(cache["k"], kn.astype(cache["k"].dtype),
+                                     (0, index, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], vn.astype(cache["v"].dtype),
+                                     (0, index, 0, 0))
+    k = shard(k, "batch", "kv_seq", "kv_heads", None)
+    v = shard(v, "batch", "kv_seq", "kv_heads", None)
+    S = k.shape[1]
+    qg = q.reshape(B, 1, K, R, hd)
+    mask = (jnp.arange(S) <= index)[None, :]
+    o = _gqa_scores_softmax_out(qg, k, v, mask, 1.0 / math.sqrt(hd))
+    o = o.reshape(B, 1, H * hd)
+    out = jnp.einsum("bsh,hd->bsd", o, p["wo"])
+    return out, {"k": k, "v": v}
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_seq: int,
+                  dtype=jnp.bfloat16) -> dict:
+    hd = cfg.resolved_head_dim
+    K = cfg.num_kv_heads
+    z = jnp.zeros((batch, max_seq, K, hd), dtype)
+    return {"k": z, "v": z}
+
+
+# ---------------------------------------------------------------------------
+# GLU FFN
+# ---------------------------------------------------------------------------
+
+
+def init_glu_ffn(key: jax.Array, d: int, ff: int) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": (jax.random.normal(k1, (d, ff)) / math.sqrt(d)).astype(PDTYPE),
+        "w_up": (jax.random.normal(k2, (d, ff)) / math.sqrt(d)).astype(PDTYPE),
+        "w_down": (jax.random.normal(k3, (ff, d)) / math.sqrt(ff)).astype(PDTYPE),
+    }
+
+
+def _act(name: str):
+    return jax.nn.gelu if name == "gelu" else jax.nn.silu
+
+
+def glu_ffn(p: dict, x: jax.Array, act: str) -> jax.Array:
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    h = _act(act)(g) * u
+    h = shard(h, "batch", "seq", "ff")
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Embedding + LM head (dense or FCS-sketched)
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key: jax.Array, cfg: ModelConfig) -> jax.Array:
+    return (jax.random.normal(key, (cfg.padded_vocab, cfg.d_model)) * 0.02
+            ).astype(PDTYPE)
+
+
+def embed_tokens(emb: jax.Array, tokens: jax.Array) -> jax.Array:
+    x = jnp.take(emb, tokens, axis=0)
+    return shard(x, "batch", "seq", "embed")
+
+
+def head_sketch_len(cfg: ModelConfig) -> int:
+    return cfg.sketch.head_hash_len or cfg.d_model // 4
+
+
+def init_head(key: jax.Array, cfg: ModelConfig) -> Optional[jax.Array]:
+    if cfg.sketch.sketched_head:
+        # FCS-sketched LM head (paper Section 4.2, CP-TRL): the projection is
+        # trained directly in the J~-dim sketch space; activations are
+        # count-sketched per token (FCS degenerates to CS for order-1
+        # activations).  CR = d_model / J~.
+        J = head_sketch_len(cfg)
+        return (jax.random.normal(key, (J, cfg.padded_vocab))
+                / math.sqrt(J)).astype(PDTYPE)
+    if cfg.tie_embeddings:
+        return None
+    return (jax.random.normal(key, (cfg.d_model, cfg.padded_vocab))
+            / math.sqrt(cfg.d_model)).astype(PDTYPE)
+
+
+import functools as _functools
+
+
+@_functools.lru_cache(maxsize=None)
+def _head_hash_tables(seed: int, d: int, J: int):
+    """Host-side (trace-safe) 2-wise-independent hash tables."""
+    import numpy as np
+    from repro.core.hashes import PRIME
+    rng = np.random.RandomState(seed & 0x7FFFFFFF)
+    ah, bh = rng.randint(1, PRIME, dtype=np.int64), rng.randint(0, PRIME, dtype=np.int64)
+    as_, bs = rng.randint(1, PRIME, dtype=np.int64), rng.randint(0, PRIME, dtype=np.int64)
+    idx = np.arange(d, dtype=np.int64)
+    h = (((ah * idx + bh) % PRIME) % J).astype(np.int32)
+    sg = (1.0 - 2.0 * (((as_ * idx + bs) % PRIME) % 2)).astype(np.float32)
+    return h, sg
+
+
+def _head_io(params: dict, x: jax.Array, cfg: ModelConfig):
+    """Returns (x_eff, W_eff) for the vocab projection, applying the FCS
+    activation sketch when the sketched head is enabled."""
+    if cfg.sketch.sketched_head:
+        J = head_sketch_len(cfg)
+        h, sg = _head_hash_tables(cfg.sketch.seed, cfg.d_model, J)
+        onehot = (jax.nn.one_hot(h, J, dtype=x.dtype)
+                  * sg[:, None].astype(x.dtype))
+        xs = jnp.einsum("bsd,dj->bsj", x, onehot)
+        return xs, params["head"]
+    head = params["head"] if params.get("head") is not None \
+        else params["embed"].T
+    return x, head
+
+
+def logits_fn(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Final-hidden -> vocab logits (f32)."""
+    x, head = _head_io(params, x, cfg)
+    logits = jnp.einsum("bsd,dv->bsv", x, head).astype(jnp.float32)
+    return shard(logits, "batch", "seq", "vocab")
+
+
+def cross_entropy(params: dict, x: jax.Array, labels: jax.Array,
+                  cfg: ModelConfig, vocab_chunk: int = 8192) -> jax.Array:
+    """Vocab-chunked online-logsumexp CE: the (B, S, V) f32 logits never
+    fully materialize, and the chunked axis is the (replicated) vocab, so
+    data/context sharding of tokens never serializes the scan.  Padded vocab
+    rows carry random-init weights; they only add a handful of terms to the
+    logsumexp (trained to -inf naturally) and are never produced as labels."""
+    B, S, _ = x.shape
+    x, head = _head_io(params, x, cfg)
+    V = head.shape[-1]
+    vc = min(vocab_chunk, V)
+    pad = (-V) % vc
+    if pad:
+        head = jnp.pad(head, ((0, 0), (0, pad)))
+    nv = (V + pad) // vc
+    hg = head.reshape(-1, nv, vc).transpose(1, 0, 2)    # (nv, d, vc)
+
+    @jax.checkpoint
+    def chunk(carry, inp):
+        m, l, gold = carry                              # (B,S),(B,S),(B,S)
+        cj, hj = inp
+        logits = jnp.einsum("bsd,dv->bsv", x, hj).astype(jnp.float32)
+        if pad:  # mask out padded columns in the final chunk
+            col = cj * vc + jnp.arange(vc)
+            logits = jnp.where(col[None, None, :] < V, logits, -1e30)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        l = l * jnp.exp(m - m_new) + jnp.sum(
+            jnp.exp(logits - m_new[..., None]), axis=-1)
+        idx = labels - cj * vc
+        valid = (idx >= 0) & (idx < vc)
+        g = jnp.take_along_axis(logits, jnp.clip(idx, 0, vc - 1)[..., None],
+                                axis=-1)[..., 0]
+        gold = gold + jnp.where(valid, g, 0.0)
+        return (m_new, l, gold), None
+
+    m0 = jnp.full((B, S), -1e30, jnp.float32)
+    z0 = jnp.zeros((B, S), jnp.float32)
+    (m, l, gold), _ = jax.lax.scan(chunk, (m0, z0, z0), (jnp.arange(nv), hg))
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))
+    return jnp.mean(lse - gold)

@@ -1,0 +1,125 @@
+"""GShard-style grouped top-k MoE with capacity, shared experts, aux loss.
+
+Dispatch/combine are expressed as one-hot einsums (TPU-friendly: everything
+lowers to MXU matmuls; no data-dependent shapes).  Tokens are routed within
+fixed-size groups so the (tokens, experts, capacity) dispatch tensor stays
+bounded: total elements = tokens * E * C with C ~= group * k / E * cf.
+
+Expert placement: experts shard over the "experts" logical axis (mesh
+"model") when E divides the axis size; otherwise expert weights stay
+replicated and each expert's d_ff is tensor-parallel over "model"
+(granite's 40 experts on a 16-way axis take this path — see DESIGN.md).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import PDTYPE, _act
+from repro.models.sharding import shard
+
+
+def init_moe(key: jax.Array, cfg: ModelConfig) -> dict:
+    m = cfg.moe
+    d, f, E = cfg.d_model, m.expert_d_ff, m.num_experts
+    ks = jax.random.split(key, 5)
+    sd, sf = 1.0 / math.sqrt(d), 1.0 / math.sqrt(f)
+    p = {
+        "router": (jax.random.normal(ks[0], (d, E)) * sd).astype(jnp.float32),
+        "we_gate": (jax.random.normal(ks[1], (E, d, f)) * sd).astype(PDTYPE),
+        "we_up": (jax.random.normal(ks[2], (E, d, f)) * sd).astype(PDTYPE),
+        "we_down": (jax.random.normal(ks[3], (E, f, d)) * sf).astype(PDTYPE),
+    }
+    if m.num_shared_experts:
+        fs = m.num_shared_experts * f
+        k1, k2, k3 = jax.random.split(ks[4], 3)
+        p["ws_gate"] = (jax.random.normal(k1, (d, fs)) * sd).astype(PDTYPE)
+        p["ws_up"] = (jax.random.normal(k2, (d, fs)) * sd).astype(PDTYPE)
+        p["ws_down"] = (jax.random.normal(k3, (fs, d)) * sf).astype(PDTYPE)
+    return p
+
+
+def capacity(cfg: ModelConfig) -> int:
+    m = cfg.moe
+    c = int(math.ceil(m.group_size * m.top_k / m.num_experts
+                      * m.capacity_factor))
+    return max(4, ((c + 3) // 4) * 4)
+
+
+def moe_ffn(p: dict, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out, aux_loss)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    E, K = m.num_experts, m.top_k
+    T = B * S
+    g = min(m.group_size, T)
+    pad = (-T) % g
+    G = (T + pad) // g
+    C = capacity(cfg)
+
+    xf = x.reshape(T, d)
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    xg = xf.reshape(G, g, d)
+    xg = shard(xg, "moe_groups", None, "embed")
+
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, K)                     # (G, g, K)
+    topw = topw / jnp.sum(topw, axis=-1, keepdims=True)
+
+    onehot_e = jax.nn.one_hot(topi, E, dtype=jnp.float32)    # (G, g, K, E)
+    # position of each (token, slot) within its expert queue, token-major
+    flat = onehot_e.transpose(0, 2, 1, 3).reshape(G, K * g, E)
+    pos_flat = jnp.cumsum(flat, axis=1) - 1.0
+    pos = pos_flat.reshape(G, K, g, E).transpose(0, 2, 1, 3)  # (G, g, K, E)
+    keep = (pos < C) & (onehot_e > 0)
+    pos_c = jnp.where(keep, pos, 0.0).sum(axis=-1)           # (G, g, K)
+    sel = keep.any(axis=-1)                                  # (G, g, K)
+    onehot_c = jax.nn.one_hot(pos_c.astype(jnp.int32), C,
+                              dtype=jnp.float32) * sel[..., None]
+
+    oe = (onehot_e * keep).astype(PDTYPE)                    # (G, g, K, E)
+    oc = onehot_c.astype(PDTYPE)                             # (G, g, K, C)
+    dispatch = jnp.einsum("gtke,gtkc->gtec", oe, oc)         # (G, g, E, C)
+    combine = jnp.einsum("gtke,gtkc,gtk->gtec", oe, oc,
+                         topw.astype(PDTYPE))
+    dispatch = shard(dispatch, "moe_groups", None, "experts", "expert_cap")
+    combine = shard(combine, "moe_groups", None, "experts", "expert_cap")
+
+    pd = x.dtype
+    ein = jnp.einsum("gtec,gtd->gecd", dispatch, xg,
+                     preferred_element_type=pd)               # (G, E, C, d)
+    ein = shard(ein, "moe_groups", "experts", "expert_cap", "embed")
+    hg = jnp.einsum("gecd,edf->gecf", ein, p["we_gate"],
+                    preferred_element_type=pd)
+    hu = jnp.einsum("gecd,edf->gecf", ein, p["we_up"],
+                    preferred_element_type=pd)
+    h = _act(cfg.act)(hg) * hu
+    h = shard(h, "moe_groups", "experts", "expert_cap", "ff")
+    eout = jnp.einsum("gecf,efd->gecd", h, p["we_down"],
+                      preferred_element_type=pd)
+    eout = shard(eout, "moe_groups", "experts", "expert_cap", "embed")
+    y = jnp.einsum("gtec,gecd->gtd", combine, eout,
+                   preferred_element_type=pd)
+
+    if m.num_shared_experts:
+        sg = jnp.einsum("gtd,df->gtf", xg, p["ws_gate"])
+        su = jnp.einsum("gtd,df->gtf", xg, p["ws_up"])
+        sh = _act(cfg.act)(sg) * su
+        sh = shard(sh, "batch", None, "ff")
+        y = y + jnp.einsum("gtf,fd->gtd", sh, p["ws_down"])
+
+    # load-balance aux loss (Switch): E * sum_e f_e * P_e
+    f_e = jnp.mean(onehot_e.sum(axis=2), axis=1)             # (G, E) token frac
+    p_e = jnp.mean(probs, axis=1)                            # (G, E)
+    aux = m.router_aux_weight * E * jnp.mean(jnp.sum(f_e * p_e, axis=-1))
+
+    y = y.reshape(G * g, d)
+    if pad:
+        y = y[:T]
+    return y.reshape(B, S, d), aux

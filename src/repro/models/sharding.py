@@ -1,0 +1,121 @@
+"""Logical-axis sharding (flax-style logical rules, dependency-free).
+
+Model code annotates activations with *logical* axis names via ``shard(x,
+"batch", "seq", "heads", None)``.  A rules dict (logical name -> mesh axis or
+tuple of mesh axes or None) is installed with ``logical_rules`` around trace
+time; outside of any rules context ``shard`` is a no-op, so the same model
+code runs un-sharded in CPU smoke tests.
+
+Uneven dims (e.g. 40 heads over a 16-way "model" axis) are allowed on
+activation constraints — GSPMD pads internally (verified on jax 0.8).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+_CTX = threading.local()
+
+
+def current_rules() -> Optional[Dict[str, MeshAxes]]:
+    return getattr(_CTX, "rules", None)
+
+
+@contextlib.contextmanager
+def logical_rules(rules: Optional[Dict[str, MeshAxes]]):
+    old = current_rules()
+    _CTX.rules = rules
+    try:
+        yield
+    finally:
+        _CTX.rules = old
+
+
+def spec_for(axes: Sequence[Optional[str]],
+             rules: Optional[Dict[str, MeshAxes]] = None) -> P:
+    rules = rules if rules is not None else (current_rules() or {})
+    return P(*(rules.get(a) if a is not None else None for a in axes))
+
+
+def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Constrain ``x`` so logical axis i is sharded per the active rules."""
+    rules = current_rules()
+    if not rules:
+        return x
+    assert len(axes) == x.ndim, (axes, x.shape)
+    return jax.lax.with_sharding_constraint(x, spec_for(axes, rules))
+
+
+# ---------------------------------------------------------------------------
+# Canonical rule sets for the production mesh.
+# ---------------------------------------------------------------------------
+
+
+def train_rules(multi_pod: bool, strategy: str = "fsdp_seq",
+                expert_parallel: bool = False) -> Dict[str, MeshAxes]:
+    """Activation rules for train/prefill.
+
+    fsdp_seq   : batch over (pod,)data + context sharding of seq over model;
+                 params FSDP-sharded (see launch.shardings).  Attention runs
+                 flash-style with replicated KV (cheap AG for GQA); SSD uses
+                 an associative scan so the chunk recurrence parallelizes
+                 across seq shards.  The default for attention + hybrid archs.
+    fsdp_batch : batch over (data, model) — one sequence per device; params
+                 FSDP-sharded; everything token-local (xLSTM single-pod).
+    tp         : batch over (pod,)data + inner-dim tensor parallelism over
+                 model (xLSTM multi-pod / prefill: mLSTM KV is full-width, so
+                 context sharding would all-gather dm-sized tensors).
+    """
+    dp = ("pod", "data") if multi_pod else ("data",)
+    base = {
+        "batch": dp, "seq": None, "residual": None, "kv_seq": None,
+        "heads": None, "kv_heads": None, "embed": None, "ff": None,
+        "vocab": None, "experts": "model" if expert_parallel else None,
+        "expert_cap": None, "ssm_inner": None, "ssm_heads": None,
+        "state": None, "zero": "data",
+        # MoE dispatch groups: over every data-parallel axis; additionally
+        # over "model" under FSDP strategies without expert parallelism
+        # (when "model" carries neither experts nor the experts' d_ff).
+        "moe_groups": dp,
+    }
+    base["chunks"] = None
+    base["ctx_shards"] = 1
+    if strategy.startswith("fsdp") and not expert_parallel:
+        base["moe_groups"] = dp + ("model",)
+    if strategy == "fsdp_seq":
+        base.update({"seq": "model", "residual": "model", "chunks": "model",
+                     "ctx_shards": 16})
+    elif strategy == "fsdp_batch":
+        base.update({"batch": ("data", "model")})
+    elif strategy == "tp":
+        base.update({"ssm_inner": "model", "ssm_heads": "model",
+                     "ff": "model", "vocab": "model",
+                     "heads": "model"})
+    else:
+        raise ValueError(strategy)
+    return base
+
+
+def decode_rules(multi_pod: bool, long_context: bool) -> Dict[str, MeshAxes]:
+    # Decode: weight-stationary TP over model (params stay sharded; no
+    # per-token gathers) + the KV cache sharded along its *sequence* dim
+    # (split-KV, FlashDecoding-style): softmax max/sum stats over the sharded
+    # axis are combined by the SPMD partitioner's cross-shard reductions.
+    # Heads stay unsharded for the 1-token query (kv-head counts (1..32)
+    # don't divide the 16-way model axis for several archs; seq always does).
+    r = train_rules(multi_pod, strategy="tp")
+    r["heads"] = None
+    r["residual"] = None  # decode S=1
+    if long_context:
+        # batch==1: shard the KV/sequence dim over data AND model.
+        r["batch"] = None
+        r["kv_seq"] = ("data", "model")
+    else:
+        r["kv_seq"] = "model"
+    return r

@@ -1,0 +1,483 @@
+"""State-space / recurrent sequence mixers: Mamba-2 (SSD) and xLSTM
+(mLSTM + sLSTM).
+
+Mamba-2 follows the chunked SSD algorithm (Dao & Gu 2024, "minimal" discrete
+form): quadratic attention-like compute inside chunks of ``cfg.ssm.chunk``
+tokens, linear recurrence across chunks (lax.scan), per-head scalar decay.
+
+mLSTM uses the stabilized parallel (quadratic) form for train/prefill,
+chunked over query rows exactly like attention, and the constant-size
+recurrent form (C: hd x hd matrix memory per head) for decode.
+
+sLSTM is a true sequential recurrence (non-associative: tanh + normalizer
+state) -> lax.scan over time; its cost is why xLSTM[7:1] uses few of them.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import PDTYPE, rms_norm, init_rms_norm
+from repro.models.sharding import current_rules, shard
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv: x (B,S,C), w (cw,C), b (C)."""
+    cw = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    # windows: y[t] = sum_k w[k] * x[t - (cw-1) + k]
+    y = sum(xp[:, k:k + x.shape[1], :] * w[k] for k in range(cw))
+    return y + b
+
+
+def _conv_step(buf: jax.Array, x_t: jax.Array, w: jax.Array,
+               b: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Single decode step of the causal conv. buf: (B, cw-1, C) past inputs,
+    x_t: (B, 1, C).  Returns (new_buf, y_t)."""
+    window = jnp.concatenate([buf, x_t], axis=1)           # (B, cw, C)
+    y = jnp.einsum("bkc,kc->bc", window, w) + b
+    return window[:, 1:], y[:, None, :]
+
+
+# ===========================================================================
+# Mamba-2 (SSD)
+# ===========================================================================
+
+
+def init_mamba2(key: jax.Array, cfg: ModelConfig) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    H = di // s.head_dim
+    N = s.d_state
+    cw = s.conv_width
+    ks = jax.random.split(key, 8)
+    sd = 1.0 / math.sqrt(d)
+    dt = jnp.exp(jax.random.uniform(ks[6], (H,)) *
+                 (math.log(0.1) - math.log(0.001)) + math.log(0.001))
+    return {
+        "wz": (jax.random.normal(ks[0], (d, di)) * sd).astype(PDTYPE),
+        "wx": (jax.random.normal(ks[1], (d, di)) * sd).astype(PDTYPE),
+        "wBC": (jax.random.normal(ks[2], (d, 2 * N)) * sd).astype(PDTYPE),
+        "wdt": (jax.random.normal(ks[3], (d, H)) * sd).astype(PDTYPE),
+        "conv_wx": (jax.random.normal(ks[4], (cw, di)) / math.sqrt(cw)).astype(PDTYPE),
+        "conv_bx": jnp.zeros((di,), PDTYPE),
+        "conv_wBC": (jax.random.normal(ks[5], (cw, 2 * N)) / math.sqrt(cw)).astype(PDTYPE),
+        "conv_bBC": jnp.zeros((2 * N,), PDTYPE),
+        "dt_bias": jnp.log(jnp.expm1(dt)).astype(jnp.float32),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm": init_rms_norm(di),
+        "out_proj": (jax.random.normal(ks[7], (di, d)) / math.sqrt(di)).astype(PDTYPE),
+        "pre_norm": init_rms_norm(d),
+    }
+
+
+def _ssd_chunked(X, dtA, dt, Bm, Cm, cs, init_state=None):
+    """Chunked SSD scan.
+    X: (B,S,H,P) values; dtA: (B,S,H) = dt*A (negative); dt: (B,S,H);
+    Bm, Cm: (B,S,N).  Returns (Y (B,S,H,P), final_state (B,H,N,P))."""
+    B_, S, H, P = X.shape
+    N = Bm.shape[-1]
+    pad = (-S) % cs
+    if pad:  # zero-pad the tail: dt=0 there, so padded steps are identity
+        X = jnp.pad(X, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dtA = jnp.pad(dtA, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // cs
+    Xt = (X * dt[..., None]).reshape(B_, nc, cs, H, P).astype(PDTYPE)
+    Ac = dtA.reshape(B_, nc, cs, H).astype(jnp.float32)
+    Bc = Bm.reshape(B_, nc, cs, N).astype(PDTYPE)
+    Cc = Cm.reshape(B_, nc, cs, N).astype(PDTYPE)
+    cum = jnp.cumsum(Ac, axis=2)                              # (B,nc,cs,H)
+
+    # intra-chunk (quadratic within chunk)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)            # (B,nc,cs,cs)
+    ldiff = cum[:, :, :, None, :] - cum[:, :, None, :, :]     # (B,nc,i,j,H)
+    ii, jj = jnp.arange(cs)[:, None], jnp.arange(cs)[None, :]
+    mask = (ii >= jj)[None, None, :, :, None]
+    L = jnp.where(mask, jnp.exp(ldiff), 0.0).astype(PDTYPE)
+    L = shard(L, "batch", "chunks", None, None, "ssm_heads")
+    Yd = jnp.einsum("bcij,bcijh,bcjhp->bcihp", scores, L, Xt,
+                    preferred_element_type=PDTYPE)
+
+    # chunk states
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum).astype(PDTYPE)  # (B,nc,cs,H)
+    S_chunk = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", Bc, decay_to_end, Xt,
+                         preferred_element_type=PDTYPE)
+    S_chunk = shard(S_chunk, "batch", "chunks", "ssm_heads", None, None)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                   # (B,nc,H)
+
+    # inter-chunk recurrence: state_c = state_{c-1} * decay_c + S_c.
+    # Two-level associative scan: a local scan within each context shard
+    # (chunk axis stays sharded, no gathers) + a tiny cross-shard scan of
+    # per-shard boundary states.  Falls back to one flat scan when the
+    # chunk axis isn't context-sharded.
+    dec_f = chunk_decay.astype(jnp.float32)                   # (B,nc,H)
+    s_f = S_chunk.astype(jnp.float32)                         # (B,nc,H,N,P)
+    if init_state is not None:
+        s_f = s_f.at[:, 0].add(init_state * dec_f[:, 0, :, None, None])
+    states_incl = _two_level_state_scan(dec_f, s_f)
+    final = states_incl[:, -1]                                # (B,H,N,P)
+    # state BEFORE chunk c = inclusive state of chunk c-1 (zero for c=0)
+    states_in = jnp.pad(states_incl[:, :-1],
+                        ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))
+    if init_state is not None:
+        states_in = states_in.at[:, 0].add(init_state)
+
+    Yi = jnp.einsum("bcin,bcih,bchnp->bcihp", Cc,
+                    jnp.exp(cum).astype(PDTYPE),
+                    states_in.astype(PDTYPE),
+                    preferred_element_type=PDTYPE)
+    Y = (Yd + Yi).reshape(B_, Sp, H, P)[:, :S]
+    return Y, final
+
+
+def _two_level_state_scan(dec: jax.Array, st: jax.Array) -> jax.Array:
+    """Inclusive scan of state_c = state_{c-1} * dec_c + st_c over axis 1.
+    dec: (B,nc,H); st: (B,nc,H,N,P)."""
+    def combine(a, b):
+        da, sa = a
+        db, sb = b
+        return (da * db, sa * db[..., None, None] + sb)
+
+    rules = current_rules() or {}
+    ns = rules.get("ctx_shards", 1)
+    B_, nc = st.shape[:2]
+    if ns <= 1 or nc % ns or nc == ns:
+        _, out = jax.lax.associative_scan(combine, (dec, st), axis=1)
+        return out
+    ncl = nc // ns
+    d2 = dec.reshape(B_, ns, ncl, *dec.shape[2:])
+    s2 = st.reshape(B_, ns, ncl, *st.shape[2:])
+    dloc, sloc = jax.lax.associative_scan(combine, (d2, s2), axis=2)
+    # cross-shard exclusive prefix of per-shard totals (small tensors)
+    dt, stt = dloc[:, :, -1], sloc[:, :, -1]
+    dp, sp = jax.lax.associative_scan(combine, (dt, stt), axis=1)
+    sp_ex = jnp.pad(sp[:, :-1], ((0, 0), (1, 0)) + ((0, 0),) * (sp.ndim - 2))
+    # fold the shard prefix into every local chunk
+    out = sp_ex[:, :, None] * dloc[..., None, None] + sloc
+    return out.reshape(B_, nc, *st.shape[2:])
+
+
+def mamba2_block(p: dict, x: jax.Array, cfg: ModelConfig,
+                 state: Optional[dict] = None, want_state: bool = False
+                 ) -> Tuple[jax.Array, Optional[dict]]:
+    """x: (B,S,d).  If ``state`` is given (decode), S must be 1 and the
+    returned state is updated; otherwise runs the chunked train/prefill path.
+    state = {"ssm": (B,H,N,P) f32, "conv_x": (B,cw-1,di), "conv_BC": (B,cw-1,2N)}
+    """
+    s = cfg.ssm
+    B, S, d = x.shape
+    x = rms_norm(x, p["pre_norm"], cfg.norm_eps)
+    di = s.expand * d
+    H = di // s.head_dim
+    P = s.head_dim
+    N = s.d_state
+
+    z = jnp.einsum("bsd,de->bse", x, p["wz"])
+    xr = jnp.einsum("bsd,de->bse", x, p["wx"])
+    BC = jnp.einsum("bsd,dn->bsn", x, p["wBC"])
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, p["wdt"]).astype(jnp.float32)
+    z = shard(z, "batch", "seq", "ssm_inner")
+    xr = shard(xr, "batch", "seq", "ssm_inner")
+
+    new_state = None
+    if state is None:
+        if want_state:  # stash conv inputs for the decode conv buffer
+            cbx = xr[:, -(s.conv_width - 1):]
+            cbc = BC[:, -(s.conv_width - 1):]
+        xr = jax.nn.silu(_causal_conv(xr, p["conv_wx"], p["conv_bx"]))
+        BC = jax.nn.silu(_causal_conv(BC, p["conv_wBC"], p["conv_bBC"]))
+    else:
+        cbx, xr_t = _conv_step(state["conv_x"], xr, p["conv_wx"], p["conv_bx"])
+        cbc, BC_t = _conv_step(state["conv_BC"], BC, p["conv_wBC"], p["conv_bBC"])
+        xr, BC = jax.nn.silu(xr_t), jax.nn.silu(BC_t)
+
+    Bm, Cm = BC[..., :N], BC[..., N:]
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])               # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                  # (H,)
+    X = xr.reshape(B, S, H, P)
+    X = shard(X, "batch", "seq", "ssm_heads", None)
+
+    if state is None:
+        Y, final = _ssd_chunked(X, dt * A, dt, Bm, Cm, min(s.chunk, S))
+        if want_state:
+            new_state = {"ssm": final, "conv_x": cbx, "conv_BC": cbc}
+    else:
+        # single-step recurrence
+        ssm = state["ssm"]                                    # (B,H,N,P)
+        dA = jnp.exp(dt[:, 0] * A)                            # (B,H)
+        dBx = jnp.einsum("bn,bh,bhp->bhnp", Bm[:, 0], dt[:, 0], X[:, 0])
+        ssm = ssm * dA[:, :, None, None] + dBx.astype(jnp.float32)
+        Y = jnp.einsum("bn,bhnp->bhp", Cm[:, 0], ssm.astype(Cm.dtype))[:, None]
+        new_state = {"ssm": ssm, "conv_x": cbx, "conv_BC": cbc}
+
+    Y = Y + X * p["D"][:, None].astype(X.dtype)
+    y = Y.reshape(B, S, di)
+    y = rms_norm((y * jax.nn.silu(z)).astype(x.dtype), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, new_state
+
+
+def init_mamba2_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> dict:
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    H = di // s.head_dim
+    return {
+        "ssm": jnp.zeros((batch, H, s.d_state, s.head_dim), jnp.float32),
+        "conv_x": jnp.zeros((batch, s.conv_width - 1, di), dtype),
+        "conv_BC": jnp.zeros((batch, s.conv_width - 1, 2 * s.d_state), dtype),
+    }
+
+
+# ===========================================================================
+# xLSTM: mLSTM
+# ===========================================================================
+
+
+def init_mlstm(key: jax.Array, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    dm = int(cfg.xlstm.proj_factor_m * d)
+    H = cfg.num_heads
+    cw = 4
+    ks = jax.random.split(key, 8)
+    sd, sm = 1.0 / math.sqrt(d), 1.0 / math.sqrt(dm)
+    return {
+        "wxb": (jax.random.normal(ks[0], (d, dm)) * sd).astype(PDTYPE),
+        "wzb": (jax.random.normal(ks[1], (d, dm)) * sd).astype(PDTYPE),
+        "conv_w": (jax.random.normal(ks[2], (cw, dm)) / math.sqrt(cw)).astype(PDTYPE),
+        "conv_b": jnp.zeros((dm,), PDTYPE),
+        "wq": (jax.random.normal(ks[3], (dm, dm)) * sm).astype(PDTYPE),
+        "wk": (jax.random.normal(ks[4], (dm, dm)) * sm).astype(PDTYPE),
+        "wv": (jax.random.normal(ks[5], (dm, dm)) * sm).astype(PDTYPE),
+        "wi": (jax.random.normal(ks[6], (dm, H)) * sm).astype(jnp.float32),
+        "wf": jnp.zeros((dm, H), jnp.float32),
+        "bi": jnp.zeros((H,), jnp.float32),
+        "bf": jnp.full((H,), 3.0, jnp.float32),   # open forget gates at init
+        "norm": init_rms_norm(dm),
+        "out_proj": (jax.random.normal(ks[7], (dm, d)) * sm).astype(PDTYPE),
+        "pre_norm": init_rms_norm(d),
+    }
+
+
+def mlstm_block(p: dict, x: jax.Array, cfg: ModelConfig,
+                state: Optional[dict] = None, q_chunk: int = 512,
+                want_state: bool = False) -> Tuple[jax.Array, Optional[dict]]:
+    B, S, d = x.shape
+    x = rms_norm(x, p["pre_norm"], cfg.norm_eps)
+    dm = int(cfg.xlstm.proj_factor_m * d)
+    H = cfg.num_heads
+    hd = dm // H
+
+    xb = jnp.einsum("bsd,de->bse", x, p["wxb"])
+    zb = jnp.einsum("bsd,de->bse", x, p["wzb"])
+    xb = shard(xb, "batch", "seq", "ssm_inner")
+
+    new_state = None
+    if state is None:
+        xc = jax.nn.silu(_causal_conv(xb, p["conv_w"], p["conv_b"]))
+    else:
+        cb, xc_t = _conv_step(state["conv"], xb, p["conv_w"], p["conv_b"])
+        xc = jax.nn.silu(xc_t)
+
+    q = jnp.einsum("bse,ef->bsf", xc, p["wq"]).reshape(B, S, H, hd)
+    k = jnp.einsum("bse,ef->bsf", xc, p["wk"]).reshape(B, S, H, hd) / math.sqrt(hd)
+    v = jnp.einsum("bse,ef->bsf", xb, p["wv"]).reshape(B, S, H, hd)
+    i_pre = (jnp.einsum("bse,eh->bsh", xc.astype(jnp.float32), p["wi"])
+             + p["bi"])                                        # (B,S,H)
+    f_pre = (jnp.einsum("bse,eh->bsh", xc.astype(jnp.float32), p["wf"])
+             + p["bf"])
+    logf = -jax.nn.softplus(-f_pre)                            # log sigmoid
+
+    if state is None:
+        h = _mlstm_parallel(q, k, v, i_pre, logf, min(q_chunk, S))
+        if want_state:
+            b = jnp.cumsum(logf, axis=1)                       # (B,S,H)
+            dexp = b[:, -1:, :] - b + i_pre                    # (B,S,H)
+            m_fin = jnp.max(dexp, axis=1)                      # (B,H)
+            w = jnp.exp(dexp - m_fin[:, None, :])              # (B,S,H)
+            kf = k.astype(jnp.float32)
+            vf = v.astype(jnp.float32)
+            C_fin = jnp.einsum("bsh,bshp,bshq->bhpq", w, kf, vf)
+            n_fin = jnp.einsum("bsh,bshp->bhp", w, kf)
+            new_state = {"C": C_fin, "n": n_fin, "m": m_fin,
+                         "conv": xb[:, -3:].astype(xb.dtype)}
+    else:
+        C, n, m = state["C"], state["n"], state["m"]           # f32
+        i_t, lf_t = i_pre[:, 0], logf[:, 0]                    # (B,H)
+        m_new = jnp.maximum(lf_t + m, i_t)
+        fd = jnp.exp(lf_t + m - m_new)[..., None]
+        idg = jnp.exp(i_t - m_new)[..., None]
+        kf = k[:, 0].astype(jnp.float32)
+        vf = v[:, 0].astype(jnp.float32)
+        C = C * fd[..., None] + idg[..., None] * kf[..., :, None] * vf[..., None, :]
+        n = n * fd + idg * kf
+        qf = q[:, 0].astype(jnp.float32)
+        num = jnp.einsum("bhp,bhpq->bhq", qf, C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", qf, n)),
+                          jnp.exp(-m_new))
+        h = (num / den[..., None])[:, None].astype(x.dtype)    # (B,1,H,hd)
+        new_state = {"C": C, "n": n, "m": m_new, "conv": cb}
+
+    h = h.reshape(B, S, dm)
+    h = rms_norm(h, p["norm"], cfg.norm_eps) * jax.nn.silu(zb)
+    out = jnp.einsum("bse,ed->bsd", h, p["out_proj"])
+    return out, new_state
+
+
+def _mlstm_parallel(q, k, v, i_pre, logf, qc):
+    """Stabilized parallel mLSTM, chunked over query rows.
+    q,k,v: (B,S,H,hd); i_pre, logf: (B,S,H)."""
+    B, S, H, hd = q.shape
+    b = jnp.cumsum(logf, axis=1)                               # (B,S,H) f32
+    pad = (-S) % qc
+    qp, bp = q, b
+    if pad:
+        qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bp = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nq = Sp // qc
+    qg = qp.reshape(B, nq, qc, H, hd).transpose(1, 0, 2, 3, 4)
+    bg = bp.reshape(B, nq, qc, H).transpose(1, 0, 2, 3)
+    k_idx = jnp.arange(S)
+
+    @jax.checkpoint
+    def chunk(carry, inp):
+        ci, qi, bi = inp                                       # qi (B,qc,H,hd)
+        q_pos = ci * qc + jnp.arange(qc)
+        causal = q_pos[:, None] >= k_idx[None, :]              # (qc,S)
+        Dm = bi[:, :, None, :] - b[:, None, :, :] + i_pre[:, None, :, :]
+        Dm = jnp.where(causal[None, :, :, None], Dm, -jnp.inf) # (B,qc,S,H)
+        m = jnp.max(Dm, axis=2)                                # (B,qc,H)
+        Dp = jnp.exp(Dm - m[:, :, None, :]).astype(q.dtype)
+        s = jnp.einsum("bqhp,bshp->bqsh", qi, k)
+        w = s * Dp
+        num = jnp.einsum("bqsh,bshp->bqhp", w, v)
+        den = jnp.maximum(
+            jnp.abs(jnp.sum(w.astype(jnp.float32), axis=2)),
+            jnp.exp(-m))                                       # (B,qc,H)
+        return carry, (num / den[..., None].astype(num.dtype))
+
+    _, hg = jax.lax.scan(chunk, None, (jnp.arange(nq), qg, bg))
+    return hg.transpose(1, 0, 2, 3, 4).reshape(B, Sp, H, hd)[:, :S]
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> dict:
+    d = cfg.d_model
+    dm = int(cfg.xlstm.proj_factor_m * d)
+    H = cfg.num_heads
+    hd = dm // H
+    return {
+        "C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, H, hd), jnp.float32),
+        "m": jnp.zeros((batch, H), jnp.float32),
+        "conv": jnp.zeros((batch, 3, dm), dtype),
+    }
+
+
+# ===========================================================================
+# xLSTM: sLSTM
+# ===========================================================================
+
+
+def _slstm_up_dim(cfg: ModelConfig) -> int:
+    """4/3 * d rounded to a 128 multiple (TPU lane / 16-way TP alignment)."""
+    return max(128, int(round(cfg.xlstm.proj_factor_s * cfg.d_model / 128)) * 128)
+
+
+def init_slstm(key: jax.Array, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    H = cfg.num_heads
+    hd = d // H
+    ds = _slstm_up_dim(cfg)
+    ks = jax.random.split(key, 12)
+    sd, sh = 1.0 / math.sqrt(d), 1.0 / math.sqrt(hd)
+    p = {}
+    for gi, g in enumerate(("i", "f", "z", "o")):
+        p[f"w{g}"] = (jax.random.normal(ks[gi], (d, d)) * sd).astype(PDTYPE)
+        p[f"r{g}"] = (jax.random.normal(ks[4 + gi], (H, hd, hd)) * sh).astype(PDTYPE)
+        p[f"b{g}"] = (jnp.full((d,), 1.0, jnp.float32) if g == "f"
+                      else jnp.zeros((d,), jnp.float32))
+    p["norm"] = init_rms_norm(d)
+    p["pre_norm"] = init_rms_norm(d)
+    p["w_up_g"] = (jax.random.normal(ks[8], (d, ds)) * sd).astype(PDTYPE)
+    p["w_up"] = (jax.random.normal(ks[9], (d, ds)) * sd).astype(PDTYPE)
+    p["w_down"] = (jax.random.normal(ks[10], (ds, d)) / math.sqrt(ds)).astype(PDTYPE)
+    return p
+
+
+def _slstm_cell(rb, carry, pre):
+    """One timestep. carry: (c, n, h, m) each (B,H,hd) f32; pre: dict of
+    per-gate input preactivations at t, each (B,H,hd) f32.  ``rb`` holds
+    the recurrent matrices pre-broadcast to (B,H,hd,hd): the batch dim
+    keeps the backward dR accumulation batch-LOCAL through the scan (one
+    cross-batch reduce at the end instead of one per timestep)."""
+    c, n, h, m = carry
+    rec = {g: jnp.einsum("bhp,bhpq->bhq", h.astype(PDTYPE), rb[g]
+                         ).astype(jnp.float32) for g in ("i", "f", "z", "o")}
+    it = pre["i"] + rec["i"]
+    ft = pre["f"] + rec["f"]
+    zt = jnp.tanh(pre["z"] + rec["z"])
+    ot = jax.nn.sigmoid(pre["o"] + rec["o"])
+    logf = -jax.nn.softplus(-ft)
+    m_new = jnp.maximum(logf + m, it)
+    fp = jnp.exp(logf + m - m_new)
+    ip = jnp.exp(it - m_new)
+    c = fp * c + ip * zt
+    n = fp * n + ip
+    h = ot * c / jnp.maximum(n, 1.0)
+    return (c, n, h, m_new)
+
+
+def slstm_block(p: dict, x: jax.Array, cfg: ModelConfig,
+                state: Optional[dict] = None, want_state: bool = False
+                ) -> Tuple[jax.Array, Optional[dict]]:
+    B, S, d = x.shape
+    x = rms_norm(x, p["pre_norm"], cfg.norm_eps)
+    H = cfg.num_heads
+    hd = d // H
+    pre = {g: (jnp.einsum("bsd,de->bse", x, p[f"w{g}"]).astype(jnp.float32)
+               + p[f"b{g}"]).reshape(B, S, H, hd)
+           for g in ("i", "f", "z", "o")}
+
+    if state is None:
+        z = jnp.zeros((B, H, hd), jnp.float32)
+        carry0 = (z, z, z, z)
+    else:
+        carry0 = (state["c"], state["n"], state["h"], state["m"])
+
+    rb = {g: jnp.broadcast_to(p[f"r{g}"], (B,) + p[f"r{g}"].shape)
+          for g in ("i", "f", "z", "o")}
+
+    def step(carry, pre_t):
+        carry = _slstm_cell(rb, carry, pre_t)
+        return carry, carry[2]                                 # emit h
+
+    pre_t = jax.tree.map(lambda a: a.transpose(1, 0, 2, 3), pre)  # (S,B,H,hd)
+    carry, hs = jax.lax.scan(step, carry0, pre_t)
+    y = hs.transpose(1, 0, 2, 3).reshape(B, S, d).astype(x.dtype)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    # post up/down GLU (proj factor 4/3)
+    g = jnp.einsum("bsd,df->bsf", y, p["w_up_g"])
+    u = jnp.einsum("bsd,df->bsf", y, p["w_up"])
+    out = jnp.einsum("bsf,fd->bsd", jax.nn.gelu(g) * u, p["w_down"])
+    new_state = None
+    if state is not None or want_state:
+        c, n, h, m = carry
+        new_state = {"c": c, "n": n, "h": h, "m": m}
+    return out, new_state
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> dict:
+    H = cfg.num_heads
+    hd = cfg.d_model // H
+    z = jnp.zeros((batch, H, hd), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": z}

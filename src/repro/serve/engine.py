@@ -1,0 +1,75 @@
+"""Batched serving engine: prefill + incremental decode over a KV cache.
+
+The decode step is the jitted ``serve_step`` the dry-run lowers; this engine
+adds request batching, greedy/temperature sampling, and cache management on
+top.  Long-context decode relies on the split-KV sharding rules
+(launch/shardings.decode_rules) when run under a mesh.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.models import transformer as tf
+
+
+@dataclass
+class GenerationResult:
+    tokens: jax.Array          # (B, max_new)
+    prompt_len: int
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, max_seq: int = 512):
+        self.cfg = cfg
+        self.params = params
+        self.max_seq = max_seq
+        self._decode = jax.jit(
+            functools.partial(tf.decode_step, cfg=cfg), donate_argnums=(1,))
+        self._prefill = jax.jit(functools.partial(tf.prefill, cfg=cfg))
+
+    def _grow_cache(self, cache, cur_len: int):
+        """Pad attention caches from prompt length to max_seq slots."""
+        pad = self.max_seq - cur_len
+        if pad <= 0:
+            return cache
+
+        def grow(path, leaf):
+            name = str(path[-1])
+            if leaf.ndim == 5 and leaf.shape[2] == cur_len:  # (L,B,S,K,hd)
+                return jnp.pad(leaf, ((0, 0), (0, 0), (0, pad),
+                                      (0, 0), (0, 0)))
+            return leaf
+        return jax.tree_util.tree_map_with_path(grow, cache)
+
+    def generate(self, tokens: jax.Array, max_new: int = 32,
+                 temperature: float = 0.0,
+                 key: Optional[jax.Array] = None) -> GenerationResult:
+        """tokens: (B, S) prompt ids.  Greedy when temperature == 0."""
+        B, S = tokens.shape
+        assert S + max_new <= self.max_seq
+        logits, cache = self._prefill(self.params, {"tokens": tokens})
+        cache = self._grow_cache(cache, S)
+        out = []
+        cur = None
+        for t in range(max_new):
+            if t == 0:
+                lg = logits
+            else:
+                lg, cache = self._decode(self.params, cache, cur,
+                                         jnp.int32(S + t - 1))
+            lg = lg[:, :self.cfg.vocab_size]
+            if temperature > 0.0:
+                key, k = jax.random.split(key)
+                nxt = jax.random.categorical(k, lg / temperature, axis=-1)
+            else:
+                nxt = jnp.argmax(lg, axis=-1)
+            cur = nxt[:, None].astype(jnp.int32)
+            out.append(nxt)
+        return GenerationResult(tokens=jnp.stack(out, axis=1), prompt_len=S)

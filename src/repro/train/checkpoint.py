@@ -1,0 +1,95 @@
+"""Fault-tolerant checkpointing: atomic, mesh-agnostic, elastic.
+
+Format: one .npz of flattened full arrays + a JSON manifest (step, config
+name, tree structure).  Writes go to a temp file + os.replace (atomic on
+POSIX), so a crash mid-write never corrupts the latest checkpoint.  Arrays
+are saved UNSHARDED (gathered), so a restart may use a different mesh
+shape — the loader reshards to whatever shardings the new mesh wants
+(elastic scaling across pod/host counts).
+
+For multi-host deployments the natural extension is one shard-file per
+host + a barrier; on this single-process container the gathered form is
+exact and keeps restarts bitwise-reproducible (tested in
+tests/test_fault_tolerance.py by killing a trainer mid-run).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_names(tree: Any):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path) for path, _ in leaves]
+    vals = [v for _, v in leaves]
+    return names, vals, jax.tree.structure(tree)
+
+
+def save(path: str, step: int, state: Any, extra: Optional[dict] = None
+         ) -> None:
+    names, vals, _ = _flatten_with_names(state)
+    os.makedirs(path, exist_ok=True)
+    # bf16 has no stable npz codec across numpy versions: store widened to
+    # f32 (exact) and narrow back on restore (bitwise for bf16 values).
+    def enc(v):
+        a = np.asarray(v)
+        if a.dtype.name == "bfloat16":
+            return a.astype(np.float32)
+        return a
+    arrs = {f"a{i}": enc(v) for i, v in enumerate(vals)}
+    tmp_npz = os.path.join(path, f".tmp.{step}.npz")
+    np.savez(tmp_npz, **arrs)
+    manifest = {"step": int(step), "names": names,
+                "extra": extra or {}}
+    tmp_json = os.path.join(path, f".tmp.{step}.json")
+    with open(tmp_json, "w") as f:
+        json.dump(manifest, f)
+    os.replace(tmp_npz, os.path.join(path, f"ckpt_{step:08d}.npz"))
+    os.replace(tmp_json, os.path.join(path, f"ckpt_{step:08d}.json"))
+    # update the LATEST pointer last (atomic)
+    tmp_l = os.path.join(path, ".tmp.latest")
+    with open(tmp_l, "w") as f:
+        f.write(str(step))
+    os.replace(tmp_l, os.path.join(path, "LATEST"))
+
+
+def latest_step(path: str) -> Optional[int]:
+    p = os.path.join(path, "LATEST")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return int(f.read().strip())
+
+
+def restore(path: str, state_like: Any, step: Optional[int] = None,
+            shardings: Optional[Any] = None) -> Tuple[int, Any]:
+    """Restore into the structure of ``state_like``; if ``shardings`` is
+    given, device_put each leaf with it (elastic resharding)."""
+    if step is None:
+        step = latest_step(path)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {path}")
+    data = np.load(os.path.join(path, f"ckpt_{step:08d}.npz"))
+    leaves, treedef = jax.tree_util.tree_flatten(state_like)
+    vals = [data[f"a{i}"] for i in range(len(leaves))]
+
+    def dec(v, l):
+        if not hasattr(l, "dtype"):
+            return v
+        import ml_dtypes  # noqa: F401  (jax dependency, provides bf16)
+        return np.asarray(v).astype(l.dtype)
+    vals = [dec(v, l) for v, l in zip(vals, leaves)]
+    if shardings is not None:
+        sh_leaves = jax.tree.leaves(shardings,
+                                    is_leaf=lambda x: x is None or hasattr(
+                                        x, "spec"))
+        vals = [jax.device_put(v, s) if s is not None else jax.device_put(v)
+                for v, s in zip(vals, sh_leaves)]
+    else:
+        vals = [jax.device_put(v) for v in vals]
+    return step, jax.tree_util.tree_unflatten(treedef, vals)

@@ -1,0 +1,88 @@
+"""CPD algorithms: exact recovery on clean tensors; sketched variants
+preserve the paper's accuracy ordering (FCS >= TS at equal hashes)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.cpd.als import als_decompose, als_residual
+from repro.cpd.rtpm import (cp_reconstruct, plain_oracle, residual_norm,
+                            rtpm, rtpm_decompose)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _sym_tensor(I, R, lams=None, noise=0.0, key=KEY):
+    Q, _ = jnp.linalg.qr(jax.random.normal(key, (I, I)))
+    U = Q[:, :R]
+    lams = jnp.arange(R, 0, -1).astype(jnp.float32) if lams is None else lams
+    T = jnp.einsum("r,ar,br,cr->abc", lams, U, U, U)
+    if noise:
+        T = T + noise * jax.random.normal(key, T.shape)
+    return T, lams, U
+
+
+def test_rtpm_exact_on_clean_tensor():
+    T, lams, U = _sym_tensor(25, 3)
+    tiuu, tuuu = plain_oracle(T)
+    lh, Uh = rtpm(tiuu, tuuu, 25, 3, KEY, n_inits=8, n_iters=15)
+    assert float(jnp.max(jnp.abs(jnp.sort(lh) - jnp.sort(lams)))) < 1e-3
+    assert float(residual_norm(T, lh, Uh)) < 1e-3
+
+
+def test_rtpm_noisy_plain_reaches_noise_floor():
+    T, lams, U = _sym_tensor(30, 5, lams=jnp.ones(5), noise=0.005)
+    Tc = jnp.einsum("r,ar,br,cr->abc", jnp.ones(5), U, U, U)
+    lh, Uh = rtpm_decompose(T, 5, KEY, method="plain", n_inits=10,
+                            n_iters=15)
+    clean_res = float(jnp.linalg.norm(Tc - cp_reconstruct(lh, Uh))
+                      / jnp.linalg.norm(Tc))
+    assert clean_res < 0.12
+
+
+@pytest.mark.slow
+def test_rtpm_fcs_beats_ts_at_equal_hashes():
+    """Prop. 1 consequence at the application level (paper Fig. 1/Table 2
+    ordering).  Averaged over seeds to damp variance."""
+    T, lams, U = _sym_tensor(30, 4, lams=jnp.ones(4), noise=0.005)
+    Tc = jnp.einsum("r,ar,br,cr->abc", jnp.ones(4), U, U, U)
+    nc = jnp.linalg.norm(Tc)
+
+    def run(method, seed):
+        lh, Uh = rtpm_decompose(T, 4, jax.random.PRNGKey(seed),
+                                method=method, hash_len=700, n_sketches=10,
+                                n_inits=10, n_iters=15)
+        return float(jnp.linalg.norm(Tc - cp_reconstruct(lh, Uh)) / nc)
+
+    fcs = sum(run("fcs", s) for s in range(3)) / 3
+    ts = sum(run("ts", s) for s in range(3)) / 3
+    assert fcs <= ts * 1.15, (fcs, ts)
+
+
+def test_als_exact_on_clean_tensor():
+    ks = jax.random.split(KEY, 3)
+    A0 = jnp.linalg.qr(jax.random.normal(ks[0], (20, 20)))[0][:, :4]
+    B0 = jnp.linalg.qr(jax.random.normal(ks[1], (20, 20)))[0][:, :4]
+    C0 = jnp.linalg.qr(jax.random.normal(ks[2], (20, 20)))[0][:, :4]
+    T = jnp.einsum("ar,br,cr->abc", A0, B0, C0)
+    lam, F = als_decompose(T, 4, KEY, method="plain", n_iters=25)
+    assert float(als_residual(T, lam, F)) < 1e-2
+
+
+@pytest.mark.slow
+def test_als_fcs_beats_ts():
+    ks = jax.random.split(KEY, 3)
+    A0 = jnp.linalg.qr(jax.random.normal(ks[0], (30, 30)))[0][:, :6]
+    B0 = jnp.linalg.qr(jax.random.normal(ks[1], (30, 30)))[0][:, :6]
+    C0 = jnp.linalg.qr(jax.random.normal(ks[2], (30, 30)))[0][:, :6]
+    T = jnp.einsum("ar,br,cr->abc", A0, B0, C0) \
+        + 0.01 * jax.random.normal(KEY, (30, 30, 30))
+
+    def run(method, seed):
+        lam, F = als_decompose(T, 6, jax.random.PRNGKey(seed),
+                               method=method, hash_len=1200, n_sketches=8,
+                               n_iters=10)
+        return float(als_residual(T, lam, F))
+
+    fcs = sum(run("fcs", s) for s in range(2)) / 2
+    ts = sum(run("ts", s) for s in range(2)) / 2
+    assert fcs <= ts * 1.1, (fcs, ts)

@@ -1,0 +1,41 @@
+"""Fault tolerance: kill a trainer subprocess mid-run, restart, verify the
+loss trajectory continues from the checkpoint (crash-restart semantics)."""
+import os
+import re
+import subprocess
+import sys
+
+import pytest
+
+ENV = dict(os.environ, PYTHONPATH="src")
+
+
+def _run(args, check=True):
+    p = subprocess.run([sys.executable, "-m", "repro.launch.train"] + args,
+                       capture_output=True, text=True, env=ENV,
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))))
+    if check and p.returncode != 0:
+        raise AssertionError(p.stderr[-2000:])
+    return p
+
+
+@pytest.mark.slow
+def test_crash_and_resume(tmp_path):
+    ckpt = str(tmp_path / "ft")
+    # run that crashes at step 15 (checkpoint cadence 10)
+    p = _run(["--arch", "gemma-2b", "--steps", "30", "--batch", "2",
+              "--seq", "32", "--ckpt-dir", ckpt, "--ckpt-every", "10",
+              "--crash-at-step", "15"], check=False)
+    assert p.returncode != 0
+    assert "injected crash" in p.stderr
+    assert os.path.exists(os.path.join(ckpt, "LATEST"))
+    with open(os.path.join(ckpt, "LATEST")) as f:
+        assert int(f.read()) == 10
+    # resume to completion
+    p2 = _run(["--arch", "gemma-2b", "--steps", "30", "--batch", "2",
+               "--seq", "32", "--ckpt-dir", ckpt, "--ckpt-every", "10",
+               "--resume"])
+    assert "FINAL loss=" in p2.stdout
+    m = re.search(r"steps=(\d+)", p2.stdout)
+    assert int(m.group(1)) == 20  # resumed from 10, ran 10..29

@@ -1,0 +1,113 @@
+"""Sharding rules: divisibility of param specs on the production mesh for
+every (arch, strategy), and a small-mesh end-to-end sharded train step in a
+subprocess (8 host devices)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES, shape_applicable
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.launch.shardings import (MODEL_AXIS, DATA_AXIS,
+                                    build_param_pspecs, cache_pspecs,
+                                    make_rules)
+from repro.models import model as M
+
+_SIZE = {"data": 16, "model": 16, "pod": 2}
+
+
+def _axes_size(entry):
+    if entry is None:
+        return 1
+    if isinstance(entry, str):
+        return _SIZE[entry]
+    n = 1
+    for a in entry:
+        n *= _SIZE[a]
+    return n
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("kind", ["train", "decode"])
+def test_param_specs_divide_evenly(arch, kind):
+    cfg = get_config(arch)
+    rules, strategy = make_rules(cfg, kind, False, False)
+    pspecs = M.param_specs(cfg)
+    specs = build_param_pspecs(cfg, pspecs, rules, strategy)
+
+    def check(path, leaf, spec):
+        for dim, entry in zip(leaf.shape, tuple(spec)):
+            size = _axes_size(entry)
+            assert dim % size == 0, (arch, kind, path, leaf.shape, spec)
+    jax.tree_util.tree_map_with_path(check, pspecs, specs)
+
+
+@pytest.mark.parametrize("arch", ["yi-9b", "zamba2-2.7b", "xlstm-1.3b"])
+def test_cache_specs_divide_evenly(arch):
+    cfg = get_config(arch)
+    for shape in SHAPES:
+        if shape.kind != "decode" or not shape_applicable(cfg, shape):
+            continue
+        rules, _ = make_rules(cfg, "decode", shape.name == "long_500k", False)
+        cspecs = M.input_specs(cfg, shape)["cache"]
+        specs = cache_pspecs(cfg, cspecs, rules)
+
+        def check(path, leaf, spec):
+            for dim, entry in zip(leaf.shape, tuple(spec)):
+                size = _axes_size(entry)
+                assert dim % size == 0, (arch, shape.name, path,
+                                         leaf.shape, spec)
+        jax.tree_util.tree_map_with_path(check, cspecs, specs)
+
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, "src")
+    import jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+    from repro.configs.registry import reduced_config
+    from repro.models import model as M
+    from repro.models.sharding import logical_rules
+
+    # tiny (2 data, 4 model) mesh; reduced config; sharded vs unsharded
+    # train step must agree.
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(AxisType.Auto,)*2)
+    cfg = reduced_config("yi-9b")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 32),
+                                          0, cfg.vocab_size),
+             "labels": jax.random.randint(jax.random.PRNGKey(2), (4, 32),
+                                          0, cfg.vocab_size)}
+    loss_ref, _ = jax.jit(M.make_train_step(cfg))(params, batch)
+
+    rules = {"batch": ("data",), "seq": "model", "residual": "model",
+             "chunks": "model", "ctx_shards": 4, "kv_seq": None,
+             "heads": None, "kv_heads": None, "embed": None, "ff": None,
+             "vocab": None, "experts": None, "expert_cap": None,
+             "ssm_inner": None, "ssm_heads": None, "state": None,
+             "zero": "data"}
+    with mesh, logical_rules(rules):
+        sharded = jax.jit(M.make_train_step(cfg))
+        loss_sh, grads = sharded(params, batch)
+    rel = abs(float(loss_sh) - float(loss_ref)) / max(abs(float(loss_ref)),
+                                                      1e-6)
+    assert rel < 0.02, (float(loss_sh), float(loss_ref))
+    print("OK", float(loss_ref), float(loss_sh))
+""")
+
+
+@pytest.mark.slow
+def test_sharded_train_step_matches_unsharded():
+    p = subprocess.run([sys.executable, "-c", SCRIPT],
+                       capture_output=True, text=True,
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))))
+    assert p.returncode == 0, p.stderr[-3000:]
+    assert "OK" in p.stdout

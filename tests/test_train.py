@@ -1,0 +1,134 @@
+"""Training substrate: optimizer behaviour, FCS gradient compression with
+error feedback, data determinism, checkpoint roundtrips."""
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SketchConfig
+from repro.configs.registry import reduced_config
+from repro.models import model as M
+from repro.train import checkpoint as ckpt
+from repro.train.data import make_batch
+from repro.train.grad_compress import (LeafCodec, _leaf_codecs,
+                                       compress_roundtrip,
+                                       init_error_feedback, sketch_leaf,
+                                       unsketch_leaf)
+from repro.train.loop import train
+from repro.train.optimizer import adamw_init, adamw_update
+
+import dataclasses
+
+
+def test_adamw_minimizes_quadratic():
+    w = {"w": jnp.array([5.0, -3.0, 2.0])}
+    opt = adamw_init(w)
+    for _ in range(200):
+        g = jax.tree.map(lambda x: 2 * x, w)     # grad of ||w||^2
+        w, opt = adamw_update(g, opt, w, lr=5e-2, weight_decay=0.0)
+    assert float(jnp.linalg.norm(w["w"])) < 0.2
+
+
+def test_grad_compression_unbiased():
+    g = jax.random.normal(jax.random.PRNGKey(0), (1 << 16,))
+    codecs, flat = _leaf_codecs({"g": g}, ratio=16, seed=0)
+    c = flat[0]
+    assert isinstance(c, LeafCodec)
+    sk = sketch_leaf(g, c, jax.random.PRNGKey(0))
+    assert sk.shape[0] == c.Jt
+    assert g.size / sk.size > 12          # compression ratio ~ ratio
+    # unbiasedness: mean of estimates over fresh hashes approaches g
+    acc = jnp.zeros_like(g)
+    n = 48
+    for t in range(n):
+        gh, _ = compress_roundtrip(g, jnp.zeros((1,)), c,
+                                   jax.random.PRNGKey(t))
+        acc = acc + gh
+    est = acc / n
+    # noise std per coord ~ sqrt((k-1)/n) * ||g||/sqrt(dim) = ~0.56
+    err = float(jnp.linalg.norm(est - g) / jnp.linalg.norm(g))
+    assert err < 0.85, err
+    corr = float(jnp.vdot(est, g) / (jnp.linalg.norm(est)
+                                     * jnp.linalg.norm(g)))
+    assert corr > 0.75, corr
+
+
+def test_compressed_sgd_converges():
+    """Unbiased compressed SGD minimizes a quadratic with lr ~ 1/(1+omega)
+    (omega ~ ratio collision variance)."""
+    dim = 1 << 16
+    target = jax.random.normal(jax.random.PRNGKey(1), (dim,))
+    x = jnp.zeros((dim,))
+    _, flat = _leaf_codecs({"x": x}, ratio=32, seed=1)
+    c = flat[0]
+
+    @jax.jit
+    def step(x, t):
+        g = x - target
+        ghat, _ = compress_roundtrip(g, jnp.zeros((1,)), c,
+                                     jax.random.PRNGKey(t))
+        return x - (0.5 / 32) * ghat
+    for t in range(1200):
+        x = step(x, t)
+    rel = float(jnp.linalg.norm(x - target) / jnp.linalg.norm(target))
+    assert rel < 0.1, rel
+
+
+def test_data_determinism():
+    cfg = reduced_config("yi-9b")
+    b1 = make_batch(cfg, 7, 4, 32, seed=3)
+    b2 = make_batch(cfg, 7, 4, 32, seed=3)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    b3 = make_batch(cfg, 8, 4, 32, seed=3)
+    assert not np.array_equal(np.asarray(b1["tokens"]),
+                              np.asarray(b3["tokens"]))
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = reduced_config("gemma-2b")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    opt = adamw_init(params)
+    state = {"params": params, "opt": opt}
+    ckpt.save(str(tmp_path), 5, state)
+    assert ckpt.latest_step(str(tmp_path)) == 5
+    step, restored = ckpt.restore(str(tmp_path), state)
+    assert step == 5
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_trainer_learns():
+    cfg = reduced_config("yi-9b")
+    h = train(cfg, steps=120, batch=8, seq=64, lr=1e-2, log_every=1000,
+              log_fn=lambda *_: None)
+    assert h.losses[-1] < h.losses[0] - 0.3
+
+
+@pytest.mark.slow
+def test_trainer_learns_compressed():
+    cfg = dataclasses.replace(
+        reduced_config("yi-9b"),
+        sketch=SketchConfig(grad_compression=True, grad_hash_ratio=8))
+    h = train(cfg, steps=120, batch=8, seq=64, lr=1e-2, log_every=1000,
+              log_fn=lambda *_: None)
+    assert h.losses[-1] < h.losses[0] - 0.2
+
+
+def test_resume_is_bitwise(tmp_path):
+    cfg = reduced_config("gemma-2b")
+    d = str(tmp_path / "run")
+    # full run
+    h_full = train(cfg, steps=20, batch=2, seq=32, lr=1e-3, ckpt_dir=None,
+                   log_every=1000, log_fn=lambda *_: None)
+    # interrupted run: ckpt at step 10, then resume
+    train(cfg, steps=10, batch=2, seq=32, lr=1e-3, ckpt_dir=d,
+          ckpt_every=10, log_every=1000, log_fn=lambda *_: None)
+    h_res = train(cfg, steps=20, batch=2, seq=32, lr=1e-3, ckpt_dir=d,
+                  ckpt_every=100, resume=True, log_every=1000,
+                  log_fn=lambda *_: None)
+    np.testing.assert_allclose(h_full.losses[10:], h_res.losses,
+                               rtol=1e-5, atol=1e-6)
