@@ -19,7 +19,8 @@ def main() -> None:
     t0 = time.time()
 
     from benchmarks import (bench_als, bench_contract, bench_grad_compress,
-                            bench_kron, bench_rtpm, bench_trl)
+                            bench_kron, bench_opt_state, bench_rtpm,
+                            bench_trl)
 
     if args.fast:
         bench_rtpm.run(I=40, Js=(400,), table2=False)
@@ -28,6 +29,7 @@ def main() -> None:
         bench_kron.run(crs=(4, 16), D=8)
         bench_contract.run(crs=(4, 16), D=8)
         bench_grad_compress.run(dims=1 << 18, ratios=(16,))
+        bench_opt_state.run(dims=(1 << 17, 1 << 13), ratios=(4,), steps=10)
     else:
         bench_rtpm.run()
         bench_als.run()
@@ -35,6 +37,7 @@ def main() -> None:
         bench_kron.run()
         bench_contract.run()
         bench_grad_compress.run()
+        bench_opt_state.run()
 
     print(f"# total benchmark wall time: {time.time()-t0:.1f}s",
           file=sys.stderr)

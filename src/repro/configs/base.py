@@ -26,6 +26,11 @@ class SketchConfig:
     ``grad_hash_ratio``: target compression ratio for FCS gradient
     compression on the pod axis (sketch length ~= numel / ratio).
     ``num_sketches``: D independent sketches (median combine).
+    ``opt_state_ratio``: > 0 moves AdamW (m, v) moments for large leaves
+    into count-sketch tables of ~numel/ratio entries per moment
+    (repro.sketch.optimizer); 0 keeps the dense optimizer (default).
+    ``opt_state_rows``: sketch rows per table (median/min combine width).
+    ``opt_state_min_elems``: leaves smaller than this stay dense.
     """
 
     sketched_head: bool = False
@@ -33,6 +38,9 @@ class SketchConfig:
     grad_compression: bool = False
     grad_hash_ratio: int = 16
     num_sketches: int = 1
+    opt_state_ratio: int = 0
+    opt_state_rows: int = 3
+    opt_state_min_elems: int = 1 << 16
     seed: int = 1234
 
 

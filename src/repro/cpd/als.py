@@ -7,6 +7,7 @@ estimate them with the Eq. 17 trick per rank column.
 """
 from __future__ import annotations
 
+import math
 from typing import Sequence, Tuple
 
 import jax
@@ -65,14 +66,23 @@ def _mttkrp_sketched(sk: jax.Array, hashes: Sequence[ModeHash],
 
 def als_decompose(T: jax.Array, rank: int, key: jax.Array,
                   method: str = "plain", hash_len: int = 3000,
-                  n_sketches: int = 10, n_iters: int = 20
-                  ) -> Tuple[jax.Array, list]:
+                  n_sketches: int = 10, n_iters: int = 20,
+                  n_inits: int = 3) -> Tuple[jax.Array, list]:
     """Asymmetric CP decomposition T ~= [[lam; A, B, C]].  Returns
-    (lam (R,), [A, B, C])."""
+    (lam (R,), [A, B, C]).
+
+    Initialization: HOSVD plus (n_inits - 1) random inits, each probed for
+    a few sweeps; the best continues.  HOSVD alone is NOT safe: when the
+    unfolding spectrum is (near-)degenerate — e.g. orthonormal factors
+    with equal weights — its leading singular vectors are an arbitrary
+    rotation of the true factors, a near-saddle from which ALS swamps
+    (observed: two columns chasing one component, residual pinned at 0.5).
+    Random inits break the symmetry; probing keeps HOSVD's advantage when
+    the spectrum is informative.
+    """
     I1, I2, I3 = T.shape
     kA, kB, kC, kh = jax.random.split(key, 4)
-    # HOSVD init (leading singular vectors of the unfoldings) — avoids the
-    # classic random-init ALS swamp where two columns chase one component.
+
     def _hosvd(mode, k, dim):
         M = jnp.moveaxis(T, mode, 0).reshape(dim, -1)
         u, _, _ = jnp.linalg.svd(M, full_matrices=False)
@@ -80,9 +90,14 @@ def als_decompose(T: jax.Array, rank: int, key: jax.Array,
         if base.shape[1] < rank:
             base = jnp.pad(base, ((0, 0), (0, rank - base.shape[1])))
         return base + 0.01 * jax.random.normal(k, (dim, rank))
-    A = _hosvd(0, kA, I1)
-    B = _hosvd(1, kB, I2)
-    C = _hosvd(2, kC, I3)
+
+    inits = [(_hosvd(0, kA, I1), _hosvd(1, kB, I2), _hosvd(2, kC, I3))]
+    for j in range(max(n_inits - 1, 0)):
+        kj = jax.random.fold_in(key, j + 1)
+        k1, k2, k3 = jax.random.split(kj, 3)
+        inits.append((jax.random.normal(k1, (I1, rank)),
+                      jax.random.normal(k2, (I2, rank)),
+                      jax.random.normal(k3, (I3, rank))))
 
     sk = None
     hashes = None
@@ -96,8 +111,7 @@ def als_decompose(T: jax.Array, rank: int, key: jax.Array,
             return _mttkrp_plain(T, Bm, Cm, mode)
         return _mttkrp_sketched(sk, hashes, Bm, Cm, mode, circular)
 
-    lam = jnp.ones((rank,))
-    for _ in range(n_iters):
+    def sweep(A, B, C):
         G = (B.T @ B) * (C.T @ C)
         A = _solve(mttkrp(B, C, 0), G)
         A = A / (jnp.linalg.norm(A, axis=0) + 1e-12)
@@ -109,7 +123,26 @@ def als_decompose(T: jax.Array, rank: int, key: jax.Array,
         # A, B are unit-norm when C is solved, so C's column norms carry
         # the full lambda.
         lam = jnp.linalg.norm(C, axis=0) + 1e-12
-        C = C / lam
+        return A, B, C / lam, lam
+
+    probe_iters = min(max(2, n_iters // 4), n_iters)
+    best = None
+    best_res = jnp.inf
+    for A, B, C in inits:
+        lam = jnp.ones((rank,))
+        for _ in range(probe_iters):
+            A, B, C, lam = sweep(A, B, C)
+        res_f = float(als_residual(T, lam, [A, B, C]))
+        # NaN handling: a divergent probe (NaN residual) must neither
+        # crash the unpack below nor shadow later finite candidates.
+        better = (best is None or res_f < float(best_res)
+                  or (math.isnan(float(best_res))
+                      and not math.isnan(res_f)))
+        if better:
+            best, best_res = (A, B, C, lam), res_f
+    A, B, C, lam = best
+    for _ in range(n_iters - probe_iters):
+        A, B, C, lam = sweep(A, B, C)
     return lam, [A, B, C]
 
 

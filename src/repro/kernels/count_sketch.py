@@ -42,12 +42,14 @@ def _cs_kernel(x_ref, h_ref, s_ref, o_ref, *, bJ: int):
                                              "interpret"))
 def count_sketch(x: jax.Array, h: jax.Array, s: jax.Array, J: int,
                  bB: int = 128, bI: int = 512, bJ: int = 256,
-                 interpret: bool = True) -> jax.Array:
+                 interpret: bool | None = None) -> jax.Array:
     """x: (B, I) -> (B, J) count sketch with shared hash (h, s).
 
-    interpret=True runs the kernel body in Python on CPU (this container);
-    on TPU pass interpret=False.
+    interpret=None auto-detects the backend: compiled on TPU, interpret
+    mode (kernel body in Python — bit-identical block semantics) off-TPU.
     """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     B, I = x.shape
     bB = min(bB, B)
     bI = min(bI, I)

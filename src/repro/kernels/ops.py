@@ -1,10 +1,12 @@
 """jit'd public wrappers for the sketching kernels.
 
-On TPU the Pallas kernels run compiled (interpret=False); on this CPU
-container they run in interpret mode, which executes the same kernel body
-per grid cell in Python — bit-identical block semantics, usable for
-correctness validation.  ``use_pallas=False`` falls back to the jnp oracle
-(the fast path on CPU and the reference everywhere).
+The Pallas kernels auto-detect the backend (``interpret=None`` -> compiled
+on TPU, interpret mode elsewhere), so call sites never pass interpret
+flags.  ``use_pallas=None`` additionally picks the implementation: the
+Pallas kernel on TPU, the pure-jnp oracle everywhere else (the fast path
+on CPU and the reference everywhere).  ``use_pallas=True`` off-TPU runs
+the kernel body in interpret mode — bit-identical block semantics, used
+by the validation tests.
 """
 from __future__ import annotations
 
@@ -12,6 +14,7 @@ import jax
 
 from repro.kernels import ref
 from repro.kernels.count_sketch import count_sketch as _cs_pallas
+from repro.kernels.sketch_update import sketch_update as _su_pallas
 from repro.kernels.unsketch import unsketch as _un_pallas
 
 
@@ -25,7 +28,7 @@ def count_sketch_op(x: jax.Array, h: jax.Array, s: jax.Array, J: int,
     if use_pallas is None:
         use_pallas = _on_tpu()
     if use_pallas:
-        return _cs_pallas(x, h, s, J, interpret=not _on_tpu())
+        return _cs_pallas(x, h, s, J)
     return ref.count_sketch_ref(x, h, s, J)
 
 
@@ -35,5 +38,20 @@ def unsketch_op(y: jax.Array, h: jax.Array, s: jax.Array,
     if use_pallas is None:
         use_pallas = _on_tpu()
     if use_pallas:
-        return _un_pallas(y, h, s, interpret=not _on_tpu())
+        return _un_pallas(y, h, s)
     return ref.unsketch_ref(y, h, s)
+
+
+def sketch_update_op(g: jax.Array, m_table: jax.Array, v_table: jax.Array,
+                     coeffs_m: jax.Array, coeffs_v: jax.Array, *,
+                     b1: float, b2: float,
+                     use_pallas: bool | None = None):
+    """Fused sketched-moment update-retrieve for one flat gradient leaf.
+    Returns (new_m, new_v, m_hat, v_hat) — see kernels/sketch_update.py."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return _su_pallas(g, m_table, v_table, coeffs_m, coeffs_v,
+                          b1=b1, b2=b2)
+    return ref.sketch_update_ref(g, m_table, v_table, coeffs_m, coeffs_v,
+                                 b1, b2)

@@ -4,6 +4,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.sketch.csvec import CSVec, accumulate, query
+
 
 def count_sketch_ref(x: jax.Array, h: jax.Array, s: jax.Array,
                      J: int) -> jax.Array:
@@ -17,3 +19,35 @@ def unsketch_ref(y: jax.Array, h: jax.Array, s: jax.Array) -> jax.Array:
     """Batched decompress: out[b, i] = s[i] * y[b, h[i]].
     y: (B, J); h: (I,); s: (I,).  -> (B, I)."""
     return y[:, h] * s[None, :].astype(y.dtype)
+
+
+def sketch_update_ref(g: jax.Array, m_table: jax.Array, v_table: jax.Array,
+                      coeffs_m: jax.Array, coeffs_v: jax.Array,
+                      b1: float, b2: float):
+    """Fused optimizer update-retrieve on sketched (m, v) moments.
+
+    g: (n,) f32 gradient; m_table/v_table: (R, C) count-sketch/count-min
+    tables; coeffs: (R, 4) uint32 hash coefficients (sketch/hashing.py).
+
+      new_m = b1 * m_table + (1-b1) * CS(g)        (signed)
+      new_v = b2 * v_table + (1-b2) * CMS(g^2)     (unsigned)
+      m_hat = median-of-rows query of new_m at all n coordinates
+      v_hat = min-of-rows query of new_v
+
+    Returns (new_m, new_v, m_hat, v_hat).  Expressed through the CSVec
+    container ops so the oracle and repro.sketch share one copy of the
+    accumulate/query math."""
+    n = g.shape[0]
+    gf = g.astype(jnp.float32)
+    cs_g = accumulate(CSVec(table=jnp.zeros_like(m_table), coeffs=coeffs_m,
+                            d=n, signed=True), gf)
+    cs_g2 = accumulate(CSVec(table=jnp.zeros_like(v_table), coeffs=coeffs_v,
+                             d=n, signed=False), gf * gf)
+    new_m = b1 * m_table + (1.0 - b1) * cs_g.table
+    new_v = b2 * v_table + (1.0 - b2) * cs_g2.table
+    idx = jnp.arange(n, dtype=jnp.int32)
+    m_hat = query(CSVec(table=new_m, coeffs=coeffs_m, d=n, signed=True),
+                  idx)
+    v_hat = query(CSVec(table=new_v, coeffs=coeffs_v, d=n, signed=False),
+                  idx)
+    return new_m, new_v, m_hat, v_hat

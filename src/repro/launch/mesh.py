@@ -7,17 +7,27 @@ before importing jax; real deployments get the same mesh over TPU chips.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5: explicit axis types; older releases are Auto-only
+    from jax.sharding import AxisType
+except ImportError:
+    AxisType = None
+
+
+def _mesh(shape, axes):
+    if AxisType is None:
+        return jax.make_mesh(tuple(shape), tuple(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)
 
 
 def make_mesh(shape, axes):
     """Elastic variant: any (data, model) / (pod, data, model) shape, used by
     the trainer for small CPU runs and by elastic restarts."""
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes)

@@ -181,6 +181,59 @@ def build_param_pspecs(cfg: ModelConfig, params_tree, rules,
 
 
 # ---------------------------------------------------------------------------
+# Optimizer-state specs
+# ---------------------------------------------------------------------------
+
+
+def _table_spec(table) -> P:
+    """Sketch tables are (rows, cols) with cols lane-aligned at
+    construction (sketch/optimizer.py:_cols_for): shard cols the same way
+    FSDP shards the largest param dim, rows replicated (rows ~ 3)."""
+    c = table.shape[1]
+    if c % (DATA_AXIS * MODEL_AXIS) == 0:
+        return P(None, ("data", "model"))
+    if c % DATA_AXIS == 0:
+        return P(None, ("data",))
+    return P(None, None)
+
+
+def opt_state_pspecs(cfg: ModelConfig, opt_state: Any,
+                     param_specs: Any) -> Any:
+    """PartitionSpecs for an optimizer-state pytree.
+
+    Dense (m, v) moments inherit their parameter's spec (the classic
+    ZeRO-3 placement); CSVec sketch tables shard their column axis over
+    the FSDP axes, and the (rows, 4) hash coefficients replicate.
+    Works for dense AdamWState too (every moment leaf mirrors params).
+    """
+    from repro.sketch.csvec import CSVec
+    from repro.sketch.optimizer import (DenseMoments, SketchedAdamWState,
+                                        SketchedMoments)
+
+    if not isinstance(opt_state, SketchedAdamWState):
+        # dense AdamWState: step replicated, (m, v) mirror params
+        return type(opt_state)(step=P(), m=param_specs, v=param_specs)
+
+    pleaves = jax.tree.leaves(param_specs,
+                              is_leaf=lambda x: isinstance(x, P))
+    mleaves, mdef = jax.tree.flatten(
+        opt_state.moments,
+        is_leaf=lambda x: isinstance(x, (DenseMoments, SketchedMoments)))
+    out = []
+    for mo, pspec in zip(mleaves, pleaves):
+        if isinstance(mo, SketchedMoments):
+            out.append(SketchedMoments(
+                m=CSVec(table=_table_spec(mo.m.table), coeffs=P(None, None),
+                        d=mo.m.d, signed=mo.m.signed, seed=mo.m.seed),
+                v=CSVec(table=_table_spec(mo.v.table), coeffs=P(None, None),
+                        d=mo.v.d, signed=mo.v.signed, seed=mo.v.seed)))
+        else:
+            out.append(DenseMoments(m=pspec, v=pspec))
+    return SketchedAdamWState(step=P(),
+                              moments=jax.tree.unflatten(mdef, out))
+
+
+# ---------------------------------------------------------------------------
 # Cache specs (decode)
 # ---------------------------------------------------------------------------
 

@@ -27,6 +27,13 @@ def main():
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--full", dest="reduced", action="store_false")
     ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--opt-state-ratio", type=int, default=0,
+                    help="> 0: sketch AdamW (m, v) moments at this "
+                         "compression ratio (repro.sketch)")
+    ap.add_argument("--opt-state-min-elems", type=int, default=None,
+                    help="leaves smaller than this keep dense moments "
+                         "(default: config value; lower it for reduced "
+                         "configs, whose leaves are all < 64Ki)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--resume", action="store_true")
@@ -35,6 +42,13 @@ def main():
     args = ap.parse_args()
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    if args.opt_state_ratio:
+        import dataclasses
+        changes = {"opt_state_ratio": args.opt_state_ratio}
+        if args.opt_state_min_elems is not None:
+            changes["opt_state_min_elems"] = args.opt_state_min_elems
+        cfg = dataclasses.replace(
+            cfg, sketch=dataclasses.replace(cfg.sketch, **changes))
     hist = train(cfg, steps=args.steps, batch=args.batch, seq=args.seq,
                  lr=args.lr, seed=args.seed, ckpt_dir=args.ckpt_dir,
                  ckpt_every=args.ckpt_every, resume=args.resume,

@@ -1,0 +1,28 @@
+"""Sketched-state subsystem: accumulable count-sketch containers and
+optimizers whose moment state lives in O(numel/ratio) sketch tables.
+
+Layering:
+  hashing.py   — in-graph uint32 hash families (shared with the Pallas
+                 kernel in repro.kernels.sketch_update)
+  csvec.py     — functional CSVec pytree container (accumulate / query /
+                 median-of-rows / topk heavy hitters)
+  optimizer.py — sketched AdamW / Adagrad over CSVec moment tables
+"""
+from repro.sketch.csvec import (CSVec, accumulate, accumulate_coords,
+                                csvec_zeros, l2_estimate, merge, query,
+                                query_all, query_row, state_bytes, topk)
+from repro.sketch.optimizer import (DenseMoments, SketchedAdamWState,
+                                    SketchedMoments, moment_state_bytes,
+                                    sketched_adagrad_init,
+                                    sketched_adagrad_update,
+                                    sketched_adamw_init,
+                                    sketched_adamw_update)
+
+__all__ = [
+    "CSVec", "accumulate", "accumulate_coords", "csvec_zeros",
+    "l2_estimate", "merge", "query", "query_all", "query_row",
+    "state_bytes", "topk",
+    "DenseMoments", "SketchedMoments", "SketchedAdamWState",
+    "moment_state_bytes", "sketched_adagrad_init", "sketched_adagrad_update",
+    "sketched_adamw_init", "sketched_adamw_update",
+]

@@ -1,0 +1,162 @@
+"""Functional CSVec: a count-sketch vector container as a JAX pytree.
+
+The container holds ONLY the (rows, cols) table plus a (rows, 4) uint32
+hash-coefficient array — O(rows * cols) state for a d-dimensional vector,
+with bucket/sign hashes recomputed on the fly (see sketch/hashing.py).
+It is linear and mergeable, so it serves as
+
+  * optimizer moment state (sketched AdamW/Adagrad in sketch/optimizer.py),
+  * a streaming gradient accumulator (tables of microbatch grads add),
+  * a serve-side frequency/heavy-hitter cache (count-min mode).
+
+Two estimate modes, chosen at construction:
+  signed=True  — classic count sketch: signed accumulate, median-of-rows
+                 estimate (unbiased; Charikar et al. 2002).
+  signed=False — count-min: unsigned accumulate, min-of-rows estimate
+                 (one-sided overestimate for nonnegative streams; the safe
+                 choice for second moments, cf. Count-Sketch-Optimizers).
+
+Everything is functional: ``accumulate`` and friends return a new CSVec.
+Shape/metadata (d, signed) ride in pytree aux data, so CSVec instances
+flow through jit / tree.map / checkpoints unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sketch.hashing import cached_coeffs, row_buckets_signs
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class CSVec:
+    table: jax.Array          # (rows, cols) f32
+    coeffs: jax.Array         # (rows, 4) uint32 hash coefficients
+    d: int                    # dimensionality of the sketched vector (aux)
+    signed: bool              # count-sketch (True) vs count-min (False)
+    seed: int = 0             # hash seed (aux; lets merge() check hashes
+                              # statically, even under jit tracing)
+
+    # -- pytree protocol -------------------------------------------------
+    def tree_flatten(self):
+        return (self.table, self.coeffs), (self.d, self.signed, self.seed)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        table, coeffs = children
+        return cls(table=table, coeffs=coeffs, d=aux[0], signed=aux[1],
+                   seed=aux[2])
+
+    # -- convenience -----------------------------------------------------
+    @property
+    def rows(self) -> int:
+        return self.table.shape[0]
+
+    @property
+    def cols(self) -> int:
+        return self.table.shape[1]
+
+
+def csvec_zeros(d: int, cols: int, rows: int = 3, seed: int = 0,
+                signed: bool = True) -> CSVec:
+    """Empty sketch for a d-vector: (rows, cols) zeros + cached coeffs."""
+    return CSVec(table=jnp.zeros((rows, cols), jnp.float32),
+                 coeffs=cached_coeffs(seed, rows), d=int(d), signed=signed,
+                 seed=int(seed))
+
+
+# ---------------------------------------------------------------------------
+# Accumulate
+# ---------------------------------------------------------------------------
+
+
+def accumulate(sk: CSVec, vec: jax.Array) -> CSVec:
+    """sk + CS(vec): scatter-add every coordinate of a dense d-vector."""
+    flat = vec.reshape(-1).astype(jnp.float32)
+    return accumulate_coords(sk, jnp.arange(flat.shape[0], dtype=jnp.int32),
+                             flat)
+
+
+def accumulate_coords(sk: CSVec, idx: jax.Array, vals: jax.Array) -> CSVec:
+    """Sparse accumulate: add vals[j] at coordinates idx[j]."""
+    bk, sg = row_buckets_signs(sk.coeffs, idx, sk.cols, sk.signed)
+    rows_ix = jnp.broadcast_to(
+        jnp.arange(sk.rows, dtype=jnp.int32)[:, None], bk.shape)
+    upd = sg * vals.astype(jnp.float32)[None, :]
+    table = sk.table.at[rows_ix.reshape(-1), bk.reshape(-1)].add(
+        upd.reshape(-1))
+    return dataclasses.replace(sk, table=table)
+
+
+# ---------------------------------------------------------------------------
+# Query
+# ---------------------------------------------------------------------------
+
+
+def _row_estimates(sk: CSVec, idx: jax.Array) -> jax.Array:
+    bk, sg = row_buckets_signs(sk.coeffs, idx, sk.cols, sk.signed)
+    gathered = jnp.take_along_axis(sk.table, bk, axis=1)     # (rows, n)
+    return gathered * sg
+
+
+def query(sk: CSVec, idx: jax.Array) -> jax.Array:
+    """Point estimates at idx: median of rows (signed) / min (unsigned)."""
+    est = _row_estimates(sk, idx)
+    if sk.signed:
+        return jnp.median(est, axis=0)
+    return jnp.min(est, axis=0)
+
+
+def query_row(sk: CSVec, idx: jax.Array, row: int) -> jax.Array:
+    """Single-row estimate (no median combine) — the r=1 baseline."""
+    return _row_estimates(sk, idx)[row]
+
+
+def query_all(sk: CSVec) -> jax.Array:
+    """Estimates for all d coordinates."""
+    return query(sk, jnp.arange(sk.d, dtype=jnp.int32))
+
+
+def topk(sk: CSVec, k: int) -> Tuple[jax.Array, jax.Array]:
+    """Heavy hitters: (indices, estimates) of the k largest |estimate|."""
+    est = query_all(sk)
+    _, ix = jax.lax.top_k(jnp.abs(est), k)
+    return ix, est[ix]
+
+
+def l2_estimate(sk: CSVec) -> jax.Array:
+    """||vec||_2 estimate: median over rows of per-row table norms."""
+    return jnp.sqrt(jnp.median(jnp.sum(sk.table ** 2, axis=1)))
+
+
+# ---------------------------------------------------------------------------
+# Algebra / accounting
+# ---------------------------------------------------------------------------
+
+
+def merge(a: CSVec, b: CSVec) -> CSVec:
+    """Sketch of the sum of the two underlying vectors.  Requires identical
+    hashes — enforced via the static (seed, rows, cols) identity, so the
+    check also works on traced tables under jit."""
+    if (a.d, a.signed, a.seed) != (b.d, b.signed, b.seed) \
+            or a.table.shape != b.table.shape:
+        raise ValueError("CSVec mismatch: incompatible containers "
+                         f"(d/signed/seed/shape {a.d}/{a.signed}/{a.seed}/"
+                         f"{a.table.shape} vs {b.d}/{b.signed}/{b.seed}/"
+                         f"{b.table.shape})")
+    return dataclasses.replace(a, table=a.table + b.table)
+
+
+def scale(sk: CSVec, alpha) -> CSVec:
+    return dataclasses.replace(sk, table=sk.table * alpha)
+
+
+def state_bytes(sk: CSVec) -> int:
+    """Persistent bytes: table + coefficients (hash tables are never
+    materialized as state)."""
+    return sk.table.size * sk.table.dtype.itemsize \
+        + sk.coeffs.size * sk.coeffs.dtype.itemsize

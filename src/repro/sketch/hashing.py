@@ -1,0 +1,85 @@
+"""In-graph uint32 hash family for sketch containers.
+
+Unlike ``core.hashes`` (tabulated affine-mod-Mersenne pairs, O(I) storage
+per mode), the optimizer-state sketches need O(1)-storage hashes evaluated
+on the fly: a tabulated (rows, numel) bucket/sign pair would cost 8 bytes
+per element per row and erase the whole memory win of sketching (m, v).
+
+The family here is multiply-add then MurmurHash3 finalize, entirely in
+uint32 with mod-2^32 wraparound, so the SAME arithmetic runs in plain jnp,
+in Pallas interpret mode, and compiled on the TPU VPU.  The finalizer is a
+bijection on uint32, so composing it with the multiply-add stage preserves
+the (approximate) 2-universality of multiply-shift hashing; empirical
+bucket/sign uniformity is asserted in tests/test_sketch_opt.py.
+
+Coefficients are drawn host-side in numpy from a seed (one (rows, 4)
+uint32 array per CSVec — bucket a/b, sign a/b) and cached per
+(seed, rows): the tables they generate are never stored.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+_M1 = 0x85EBCA6B
+_M2 = 0xC2B2AE35
+
+
+def make_coeffs(seed: int, rows: int) -> jax.Array:
+    """(rows, 4) uint32: (a_bucket, b_bucket, a_sign, b_sign); a's odd."""
+    rng = np.random.RandomState(np.uint32(seed) ^ 0x5EEDC0DE)
+    c = rng.randint(0, 2 ** 31, size=(rows, 4)).astype(np.uint64)
+    c = (c * 2 + 1) % (2 ** 32)          # odd multipliers (and odd b: fine)
+    return jnp.asarray(c.astype(np.uint32))
+
+
+def mix32(x: jax.Array) -> jax.Array:
+    """MurmurHash3 fmix32 (a bijection on uint32)."""
+    x = x ^ (x >> jnp.uint32(16))
+    x = x * jnp.uint32(_M1)
+    x = x ^ (x >> jnp.uint32(13))
+    x = x * jnp.uint32(_M2)
+    x = x ^ (x >> jnp.uint32(16))
+    return x
+
+
+def bucket_hash(idx: jax.Array, a: jax.Array, b: jax.Array,
+                c: int) -> jax.Array:
+    """Buckets in [0, c) for (possibly broadcast) uint32 indices."""
+    return (mix32(a * idx + b) % jnp.uint32(c)).astype(jnp.int32)
+
+
+def sign_hash(idx: jax.Array, a: jax.Array, b: jax.Array) -> jax.Array:
+    """Signs in {-1.0, +1.0} (f32) from the top mixed bit."""
+    bit = (mix32(a * idx + b) >> jnp.uint32(31)).astype(jnp.float32)
+    return 1.0 - 2.0 * bit
+
+
+def row_buckets_signs(coeffs: jax.Array, idx: jax.Array, c: int,
+                      signed: bool):
+    """(rows, n) buckets and signs for an int index vector.
+
+    ``signed=False`` (count-min mode) returns all-ones signs.
+    """
+    u = idx.astype(jnp.uint32)[None, :]
+    bk = bucket_hash(u, coeffs[:, 0:1], coeffs[:, 1:2], c)
+    if signed:
+        sg = sign_hash(u, coeffs[:, 2:3], coeffs[:, 3:4])
+    else:
+        sg = jnp.ones(bk.shape, jnp.float32)
+    return bk, sg
+
+
+@functools.lru_cache(maxsize=None)
+def _cached_coeffs_key(seed: int, rows: int):
+    # lru_cache must hold host arrays, not traced values
+    return np.asarray(make_coeffs(seed, rows))
+
+
+def cached_coeffs(seed: int, rows: int) -> jax.Array:
+    """Coefficients for (seed, rows), cached host-side."""
+    return jnp.asarray(_cached_coeffs_key(int(seed), int(rows)))

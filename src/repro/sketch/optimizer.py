@@ -1,0 +1,215 @@
+"""Sketched optimizers: AdamW / Adagrad with (m, v) moments in CSVec tables.
+
+After parameters, AdamW's f32 (m, v) is the largest memory consumer of
+training (8 bytes/param).  Both moment recursions are linear-ish in the
+per-step statistic, and count-sketch tables are linear containers, so the
+EMAs can run IN SKETCH SPACE exactly:
+
+    m_t table = b1 * table + (1-b1) * CS(g_t)
+    => query(m_t) is the count-sketch estimate of the true dense m_t.
+
+First moments use a signed count sketch (median-of-rows, unbiased); second
+moments use count-min (unsigned, min-of-rows): v feeds a denominator, and
+count-min's one-sided overestimate can only shrink the step — the safe
+failure mode (cf. GeKeShi/Count-Sketch-Optimizers).  Hashes are FIXED per
+leaf (fresh hashes would decohere the EMA), evaluated on the fly from
+O(1) coefficients.
+
+Every leaf with >= min_elems elements gets sketched moments with
+rows * cols ~= numel / ratio table entries per moment (a ~ratio x state
+reduction); small leaves (norms, biases) stay dense — they are cheap and
+stability-critical.  The per-leaf hot path is the fused update-retrieve
+op (kernels/sketch_update.py compiled on TPU; its jnp oracle elsewhere).
+
+State is a plain pytree (step + per-param-leaf DenseMoments |
+SketchedMoments), so checkpointing (train/checkpoint.py), the loss-spike
+skip guard in train/loop.py, and sharding (launch/shardings.py:
+opt_state_pspecs) all treat it like any other optimizer state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sketch.csvec import CSVec, csvec_zeros, state_bytes
+
+DEFAULT_MIN_ELEMS = 1 << 16
+
+
+class DenseMoments(NamedTuple):
+    m: jax.Array
+    v: jax.Array
+
+
+class SketchedMoments(NamedTuple):
+    m: CSVec                  # signed count sketch
+    v: CSVec                  # unsigned count-min
+
+
+class SketchedAdamWState(NamedTuple):
+    step: jax.Array           # () int32
+    moments: Any              # params-shaped tree of *Moments leaves
+
+
+class SketchedAdagradState(NamedTuple):
+    step: jax.Array
+    moments: Any              # params-shaped tree of CSVec | jax.Array (v)
+
+
+def _is_moments(x) -> bool:
+    return isinstance(x, (DenseMoments, SketchedMoments, CSVec))
+
+
+def _cols_for(numel: int, ratio: int, rows: int) -> int:
+    """Per-row table width: numel/(rows*ratio) rounded up to lane-aligned
+    multiples (128; 256 when large, so FSDP can shard 256-way)."""
+    c = -(-numel // (rows * ratio))
+    align = 256 if c >= 2048 else 128
+    return -(-c // align) * align
+
+
+def _leaf_seed(seed: int, i: int) -> int:
+    return (int(seed) * 1_000_003 + i) % (1 << 31)
+
+
+def sketched_adamw_init(params: Any, ratio: int, rows: int = 3,
+                        min_elems: int = DEFAULT_MIN_ELEMS,
+                        seed: int = 0) -> SketchedAdamWState:
+    leaves, tdef = jax.tree.flatten(params)
+    moments = []
+    for i, p in enumerate(leaves):
+        if ratio > 0 and p.size >= min_elems:
+            cols = _cols_for(p.size, ratio, rows)
+            moments.append(SketchedMoments(
+                m=csvec_zeros(p.size, cols, rows,
+                              seed=_leaf_seed(seed, 2 * i), signed=True),
+                v=csvec_zeros(p.size, cols, rows,
+                              seed=_leaf_seed(seed, 2 * i + 1),
+                              signed=False)))
+        else:
+            z = jnp.zeros(p.shape, jnp.float32)
+            moments.append(DenseMoments(m=z, v=z))
+    return SketchedAdamWState(step=jnp.zeros((), jnp.int32),
+                              moments=jax.tree.unflatten(tdef, moments))
+
+
+def sketched_adamw_update(grads: Any, state: SketchedAdamWState, params: Any,
+                          lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+                          eps: float = 1e-8, weight_decay: float = 0.01,
+                          use_pallas: bool | None = None,
+                          ) -> Tuple[Any, SketchedAdamWState]:
+    from repro.kernels.ops import sketch_update_op
+    from repro.train.optimizer import adamw_leaf_update
+
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd_dense(p, g, mom: DenseMoments):
+        newp, m, v = adamw_leaf_update(p, g, mom.m, mom.v, lr=lr, b1=b1,
+                                       b2=b2, eps=eps,
+                                       weight_decay=weight_decay,
+                                       bc1=bc1, bc2=bc2)
+        return newp, DenseMoments(m=m, v=v)
+
+    def upd_sketched(p, g, mom: SketchedMoments):
+        gf = g.reshape(-1).astype(jnp.float32)
+        new_m, new_v, m_hat, v_hat = sketch_update_op(
+            gf, mom.m.table, mom.v.table, mom.m.coeffs, mom.v.coeffs,
+            b1=b1, b2=b2, use_pallas=use_pallas)
+        mh = (m_hat / bc1).reshape(p.shape)
+        vh = (jnp.maximum(v_hat, 0.0) / bc2).reshape(p.shape)
+        delta = mh / (jnp.sqrt(vh) + eps) \
+            + weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+                SketchedMoments(m=dataclasses.replace(mom.m, table=new_m),
+                                v=dataclasses.replace(mom.v, table=new_v)))
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mom = jax.tree.leaves(state.moments, is_leaf=_is_moments)
+    out = [upd_sketched(p, g, mo) if isinstance(mo, SketchedMoments)
+           else upd_dense(p, g, mo)
+           for p, g, mo in zip(flat_p, flat_g, flat_mom)]
+    new_params = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_moments = jax.tree.unflatten(tdef, [o[1] for o in out])
+    return new_params, SketchedAdamWState(step=step, moments=new_moments)
+
+
+# ---------------------------------------------------------------------------
+# Adagrad variant (second moment only, accumulated — not an EMA)
+# ---------------------------------------------------------------------------
+
+
+def sketched_adagrad_init(params: Any, ratio: int, rows: int = 3,
+                          min_elems: int = DEFAULT_MIN_ELEMS,
+                          seed: int = 0) -> SketchedAdagradState:
+    leaves, tdef = jax.tree.flatten(params)
+    moments = []
+    for i, p in enumerate(leaves):
+        if ratio > 0 and p.size >= min_elems:
+            cols = _cols_for(p.size, ratio, rows)
+            moments.append(csvec_zeros(p.size, cols, rows,
+                                       seed=_leaf_seed(seed, i),
+                                       signed=False))
+        else:
+            moments.append(jnp.zeros(p.shape, jnp.float32))
+    return SketchedAdagradState(step=jnp.zeros((), jnp.int32),
+                                moments=jax.tree.unflatten(tdef, moments))
+
+
+def sketched_adagrad_update(grads: Any, state: SketchedAdagradState,
+                            params: Any, lr: float = 1e-2, eps: float = 1e-8,
+                            ) -> Tuple[Any, SketchedAdagradState]:
+    from repro.sketch.csvec import accumulate, query_all
+
+    def upd(p, g, mom):
+        gf = g.astype(jnp.float32)
+        if isinstance(mom, CSVec):
+            mom = accumulate(mom, jnp.square(gf))
+            vh = jnp.maximum(query_all(mom), 0.0).reshape(p.shape)
+        else:
+            mom = mom + jnp.square(gf)
+            vh = mom
+        newp = (p.astype(jnp.float32)
+                - lr * gf / (jnp.sqrt(vh) + eps)).astype(p.dtype)
+        return newp, mom
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mom = jax.tree.leaves(state.moments, is_leaf=_is_moments)
+    out = [upd(p, g, mo) for p, g, mo in zip(flat_p, flat_g, flat_mom)]
+    return (jax.tree.unflatten(tdef, [o[0] for o in out]),
+            SketchedAdagradState(
+                step=state.step + 1,
+                moments=jax.tree.unflatten(tdef, [o[1] for o in out])))
+
+
+# ---------------------------------------------------------------------------
+# Accounting
+# ---------------------------------------------------------------------------
+
+
+def moment_state_bytes(state) -> dict:
+    """Persistent moment-state bytes, split dense vs sketched, plus the
+    bytes the sketched leaves would have cost dense (f32 m+v or v)."""
+    dense = sketched = dense_equiv = 0
+    per_moment = 2 if isinstance(state, SketchedAdamWState) else 1
+    for mo in jax.tree.leaves(state.moments, is_leaf=_is_moments):
+        if isinstance(mo, SketchedMoments):
+            sketched += state_bytes(mo.m) + state_bytes(mo.v)
+            dense_equiv += 2 * mo.m.d * 4
+        elif isinstance(mo, CSVec):
+            sketched += state_bytes(mo)
+            dense_equiv += mo.d * 4
+        elif isinstance(mo, DenseMoments):
+            dense += mo.m.size * 4 + mo.v.size * 4
+        else:
+            dense += mo.size * 4 * per_moment
+    return {"dense": dense, "sketched": sketched,
+            "sketched_dense_equiv": dense_equiv,
+            "total": dense + sketched}

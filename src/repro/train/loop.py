@@ -8,6 +8,10 @@
     log + test hooks)
   * optional FCS gradient compression (error-feedback state is part of the
     checkpoint, so restarts preserve convergence behaviour)
+  * optional sketched optimizer state (cfg.sketch.opt_state_ratio > 0):
+    AdamW moments live in count-sketch tables (repro.sketch), shrinking
+    optimizer memory to O(numel/ratio); the state pytree checkpoints and
+    resumes like the dense one.
   * optional loss-spike skip: steps whose loss is > spike_factor x EMA are
     applied with zero LR (gradient skipped), a common large-run guard.
 """
@@ -26,7 +30,7 @@ from repro.train import checkpoint as ckpt_lib
 from repro.train import data as data_lib
 from repro.train.grad_compress import (init_error_feedback,
                                        make_compressed_train_step)
-from repro.train.optimizer import AdamWState, adamw_init, adamw_update
+from repro.train.optimizer import make_optimizer
 
 
 @dataclass
@@ -50,7 +54,15 @@ def train(cfg: ModelConfig, *, steps: int, batch: int, seq: int,
                 else grad_compression)
     key = jax.random.PRNGKey(seed)
     params = M.init_params(key, cfg)
-    opt = adamw_init(params)
+    opt_init, opt_update = make_optimizer(cfg, lr=lr)
+    opt = opt_init(params)
+    if cfg.sketch.opt_state_ratio > 0:
+        from repro.sketch.optimizer import moment_state_bytes
+        b = moment_state_bytes(opt)
+        shrink = (b["sketched_dense_equiv"] / b["sketched"]
+                  if b["sketched"] else 1.0)
+        log_fn(f"[opt] sketched moments: {b['sketched']} B sketched "
+               f"({shrink:.1f}x vs dense) + {b['dense']} B dense leaves")
     ef = init_error_feedback(params, cfg.sketch.grad_hash_ratio,
                              cfg.sketch.seed) if compress else None
     start_step = 0
@@ -72,7 +84,7 @@ def train(cfg: ModelConfig, *, steps: int, batch: int, seq: int,
             loss, grads, ef = grad_step(params, ef, batch_d, step_idx)
         else:
             loss, grads = base_step(params, batch_d)
-        new_params, new_opt = adamw_update(grads, opt, params, lr=lr)
+        new_params, new_opt = opt_update(grads, opt, params)
         # loss-spike guard: keep old params/opt when skipping
         new_params = jax.tree.map(
             lambda np_, p: jnp.where(skip, p, np_), new_params, params)

@@ -3,10 +3,17 @@
 Optimizer state is f32 (m, v) and inherits each parameter's sharding; under
 the FSDP strategies the states are therefore already fully sharded
 (ZeRO-3-equivalent).  ``adamw_update`` is functional and jit-friendly.
+
+``make_optimizer`` is the config-driven entry point: with
+``cfg.sketch.opt_state_ratio > 0`` it returns the sketched AdamW from
+repro.sketch.optimizer (moments in count-sketch tables, O(numel/ratio)
+state); otherwise the dense AdamW below.  Both sides share the
+(init, update) protocol: ``init(params) -> state`` and
+``update(grads, state, params) -> (params, state)``.
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Tuple
+from typing import Any, Callable, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +31,19 @@ def adamw_init(params: Any) -> AdamWState:
                       v=jax.tree.map(jnp.copy, zeros))
 
 
+def adamw_leaf_update(p, g, m, v, *, lr, b1, b2, eps, weight_decay,
+                      bc1, bc2):
+    """One AdamW leaf: returns (new_p, new_m, new_v).  The single source
+    of the dense moment math — the sketched optimizer's dense leaves
+    (repro.sketch.optimizer) reuse it."""
+    gf = g.astype(jnp.float32)
+    m = b1 * m + (1.0 - b1) * gf
+    v = b2 * v + (1.0 - b2) * jnp.square(gf)
+    delta = (m / bc1) / (jnp.sqrt(v / bc2) + eps) \
+        + weight_decay * p.astype(jnp.float32)
+    return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+
 def adamw_update(grads: Any, state: AdamWState, params: Any,
                  lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
                  eps: float = 1e-8, weight_decay: float = 0.01,
@@ -34,13 +54,9 @@ def adamw_update(grads: Any, state: AdamWState, params: Any,
     bc2 = 1.0 - b2 ** t
 
     def upd(p, g, m, v):
-        gf = g.astype(jnp.float32)
-        m = b1 * m + (1.0 - b1) * gf
-        v = b2 * v + (1.0 - b2) * jnp.square(gf)
-        mh = m / bc1
-        vh = v / bc2
-        delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
-        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+        return adamw_leaf_update(p, g, m, v, lr=lr, b1=b1, b2=b2, eps=eps,
+                                 weight_decay=weight_decay, bc1=bc1,
+                                 bc2=bc2)
 
     flat_p, tdef = jax.tree.flatten(params)
     flat_g = jax.tree.leaves(grads)
@@ -52,6 +68,32 @@ def adamw_update(grads: Any, state: AdamWState, params: Any,
     new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
     new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
     return new_p, AdamWState(step=step, m=new_m, v=new_v)
+
+
+def make_optimizer(cfg, lr: float = 3e-4
+                   ) -> Tuple[Callable[[Any], Any],
+                              Callable[[Any, Any, Any], Tuple[Any, Any]]]:
+    """(init, update) for the config: sketched AdamW when
+    ``cfg.sketch.opt_state_ratio > 0``, dense AdamW otherwise."""
+    sk = cfg.sketch
+    if sk.opt_state_ratio > 0:
+        from repro.sketch.optimizer import (sketched_adamw_init,
+                                            sketched_adamw_update)
+
+        def init(params):
+            return sketched_adamw_init(
+                params, ratio=sk.opt_state_ratio, rows=sk.opt_state_rows,
+                min_elems=sk.opt_state_min_elems, seed=sk.seed)
+
+        def update(grads, state, params):
+            return sketched_adamw_update(grads, state, params, lr=lr)
+
+        return init, update
+
+    def update(grads, state, params):
+        return adamw_update(grads, state, params, lr=lr)
+
+    return adamw_init, update
 
 
 def sgd_update(grads: Any, params: Any, lr: float = 1e-2) -> Any:

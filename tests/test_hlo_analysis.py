@@ -39,12 +39,12 @@ SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp
-    from jax.sharding import PartitionSpec as P, AxisType
+    from jax.sharding import PartitionSpec as P
     import sys
     sys.path.insert(0, "src")
     from repro.launch.hlo_analysis import analyze
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(AxisType.Auto,)*2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((2, 4), ("data", "model"))
     def f(x, w):
         def body(c, wl):
             c = jnp.tanh(c @ wl)

@@ -70,15 +70,16 @@ SCRIPT = textwrap.dedent("""
     import sys
     sys.path.insert(0, "src")
     import jax, jax.numpy as jnp
-    from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+    from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.configs.registry import reduced_config
     from repro.models import model as M
     from repro.models.sharding import logical_rules
+    from repro.launch.mesh import make_mesh
 
     # tiny (2 data, 4 model) mesh; reduced config; sharded vs unsharded
-    # train step must agree.
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(AxisType.Auto,)*2)
+    # train step must agree.  (make_mesh guards the AxisType import, which
+    # jax < 0.5 doesn't have.)
+    mesh = make_mesh((2, 4), ("data", "model"))
     cfg = reduced_config("yi-9b")
     params = M.init_params(jax.random.PRNGKey(0), cfg)
     batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 32),
