@@ -20,7 +20,7 @@ def main() -> None:
 
     from benchmarks import (bench_als, bench_contract, bench_grad_compress,
                             bench_kron, bench_opt_state, bench_rtpm,
-                            bench_trl)
+                            bench_serve, bench_trl)
 
     if args.fast:
         bench_rtpm.run(I=40, Js=(400,), table2=False)
@@ -30,6 +30,7 @@ def main() -> None:
         bench_contract.run(crs=(4, 16), D=8)
         bench_grad_compress.run(dims=1 << 18, ratios=(16,))
         bench_opt_state.run(dims=(1 << 17, 1 << 13), ratios=(4,), steps=10)
+        bench_serve.run(n_requests=8, max_new=4, max_batch=2)
     else:
         bench_rtpm.run()
         bench_als.run()
@@ -38,6 +39,7 @@ def main() -> None:
         bench_contract.run()
         bench_grad_compress.run()
         bench_opt_state.run()
+        bench_serve.run()
 
     print(f"# total benchmark wall time: {time.time()-t0:.1f}s",
           file=sys.stderr)

@@ -1,17 +1,25 @@
-"""Serving example: batched greedy generation through the prefill+decode
-engine (the same serve_step the multi-pod dry-run lowers).
+"""Serving examples: the batched generate facade AND the request-stream
+continuous-batching API underneath it.
 
   PYTHONPATH=src python examples/serve_lm.py [--arch gemma-2b]
+
+Part 1 uses ``ServeEngine.generate`` — the classic (B, S) prompts in,
+(B, max_new) tokens out API.  Part 2 drives ``SlotScheduler`` directly:
+submit requests of mixed prompt lengths, pump ``step()``, and collect
+completions as they retire — the decode step compiles exactly once and
+hot prompt prefixes get admitted to the count-min gated KV cache.
 """
 import argparse
+import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.registry import ARCH_IDS, reduced_config
 from repro.models import model as M
 from repro.serve.engine import ServeEngine
+from repro.serve.scheduler import KV_FAMILIES, Request, SlotScheduler
 
 
 def main():
@@ -23,19 +31,47 @@ def main():
     args = ap.parse_args()
 
     cfg = reduced_config(args.arch)
-    key = jax.random.PRNGKey(0)
-    params = M.init_params(key, cfg)
+    k_params, k_prompts = jax.random.split(jax.random.PRNGKey(0))
+    params = M.init_params(k_params, cfg)
+
+    # -- Part 1: batched generate facade --------------------------------
     engine = ServeEngine(cfg, params,
                          max_seq=args.prompt_len + args.max_new + 8)
-    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
-                                 cfg.vocab_size)
+    prompts = jax.random.randint(k_prompts, (args.batch, args.prompt_len),
+                                 0, cfg.vocab_size)
     t0 = time.time()
     res = engine.generate(prompts, max_new=args.max_new)
     dt = time.time() - t0
     n = args.batch * args.max_new
-    print(f"{n} tokens in {dt:.2f}s ({n/dt:.1f} tok/s incl. compile)")
+    print(f"[generate] {n} tokens in {dt:.2f}s "
+          f"({n/dt:.1f} tok/s incl. compile)")
     for i in range(min(2, args.batch)):
-        print(f"seq {i}:", res.tokens[i].tolist())
+        print(f"  seq {i}:", res.tokens[i, :8].tolist())
+
+    # -- Part 2: request-stream API --------------------------------------
+    if cfg.family not in KV_FAMILIES:
+        print(f"[stream] {cfg.family} family uses the synchronized "
+              "fallback; request-stream demo skipped")
+        return
+    serve = dataclasses.replace(cfg.serve, max_batch=2, max_seq=128,
+                                admit_threshold=2)
+    sched = SlotScheduler(cfg, params, serve=serve)
+    rng = np.random.RandomState(0)
+    system = rng.randint(0, cfg.vocab_size, (32,)).astype(np.int32)
+    for rid in range(6):
+        # mixed lengths, all sharing the 32-token "system prompt"
+        tail = rng.randint(0, cfg.vocab_size,
+                           size=rng.randint(1, 9)).astype(np.int32)
+        sched.submit(Request(rid=rid, tokens=np.concatenate([system, tail]),
+                             max_new=6))
+    while sched.pending:
+        done = sched.step()          # admit -> one decode chunk -> retire
+        for c in done:
+            print(f"[stream] rid {c.rid} (prompt {c.prompt_len}, "
+                  f"prefix_hit={c.prefix_hit}): {c.tokens.tolist()}")
+    st = sched.prefix_cache.stats
+    print(f"[stream] decode compilations: {sched.decode_compilations}, "
+          f"hit rate {st.hit_rate:.2f}, cached bytes {st.bytes}")
 
 
 if __name__ == "__main__":

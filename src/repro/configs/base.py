@@ -45,6 +45,53 @@ class SketchConfig:
 
 
 # ---------------------------------------------------------------------------
+# Serving configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Continuous-batching engine knobs (repro.serve.scheduler).
+
+    ``max_batch``/``max_seq``: the fixed slot-cache geometry — the KV cache
+    is preallocated at (L, max_batch, max_seq, K, hd) and the decode step
+    compiles exactly once for the engine's lifetime.
+    ``decode_chunk``: decode steps per scheduler intervention (the jitted
+    lax.scan length); admission/retirement happens between chunks.
+    ``prefill_bucket``: prompt lengths are padded up to a multiple of this
+    before prefill so the number of prefill compilations is bounded by the
+    number of buckets, not distinct prompt lengths (padded junk tokens are
+    causally masked and never attended; for the moe family bucketing can
+    perturb expert-capacity dispatch — set 1 for exact-length prefill).
+    ``admit_threshold``: a prompt prefix's KV block is admitted to the
+    bounded prefix cache only once its count-min estimated frequency
+    reaches this value (TinyLFU-style sketch-gated admission; count-min's
+    one-sided overestimate can only admit early, never starve).
+    ``prefix_block``: prefix granularity in tokens — block-multiple
+    prefixes are counted/cached.
+    ``prefix_cache_bytes``: hard byte budget for cached KV blocks (LRU
+    eviction keeps the total at or under this).
+    ``cm_cols``/``cm_rows``: count-min table geometry (O(table) state
+    regardless of unique-prompt cardinality).
+    ``cm_decay_every``/``cm_decay``: every N observed prompts the counts
+    are aged by the decay factor so stale prefixes lose admission priority.
+    """
+
+    max_batch: int = 8
+    max_seq: int = 512
+    decode_chunk: int = 8
+    prefill_bucket: int = 32
+    admit_threshold: int = 2
+    prefix_block: int = 16
+    prefix_cache_bytes: int = 1 << 24
+    cm_cols: int = 1024
+    cm_rows: int = 4
+    cm_decay_every: int = 1024
+    cm_decay: float = 0.5
+    seed: int = 0
+
+
+# ---------------------------------------------------------------------------
 # Model configuration
 # ---------------------------------------------------------------------------
 
@@ -110,6 +157,7 @@ class ModelConfig:
     xlstm: Optional[XLSTMConfig] = None
     hybrid: Optional[HybridConfig] = None
     sketch: SketchConfig = SketchConfig()
+    serve: ServeConfig = ServeConfig()
     # frontend stub for [audio]/[vlm]: train/prefill consume precomputed
     # frame/patch embeddings instead of token ids.
     frontend: str = "none"           # none | audio_stub | vision_stub

@@ -124,6 +124,17 @@ ORACLES = {
 # ---------------------------------------------------------------------------
 
 
+def _nan_safe_argmax(vals: jax.Array) -> jax.Array:
+    """Best-of-inits selection that a divergent candidate cannot hijack.
+
+    Same guard as cpd/als.py's multi-init probe: a power iteration that
+    diverges under a noisy sketched oracle yields lambda = NaN (or +/-inf),
+    and jnp.argmax propagates NaN as the "max" — one bad init would then
+    poison the deflation of every later component.  Non-finite candidates
+    are demoted to -inf so a finite init always wins when one exists."""
+    return jnp.argmax(jnp.where(jnp.isfinite(vals), vals, -jnp.inf))
+
+
 def rtpm(tiuu: Callable, tuuu: Callable, I: int, rank: int, key: jax.Array,
          n_inits: int = 15, n_iters: int = 20,
          deflate: Optional[Callable] = None
@@ -150,7 +161,7 @@ def rtpm(tiuu: Callable, tuuu: Callable, I: int, rank: int, key: jax.Array,
         inits = inits / jnp.linalg.norm(inits, axis=1, keepdims=True)
         cands = jax.lax.map(lambda u0: power(u0, cur_tiuu), inits)
         vals = jax.lax.map(cur_tuuu, cands)
-        best = jnp.argmax(vals)
+        best = _nan_safe_argmax(vals)
         u = power(cands[best], cur_tiuu)               # a few extra polish iters
         lam = cur_tuuu(u)
         lams.append(lam)

@@ -266,3 +266,37 @@ def cache_pspecs(cfg: ModelConfig, cache_tree: Any,
         return P(*([None] * nd))
 
     return jax.tree_util.tree_map_with_path(leaf_spec, cache_tree)
+
+
+# ---------------------------------------------------------------------------
+# Continuous-batching engine state specs (decode)
+# ---------------------------------------------------------------------------
+
+
+def serve_state_pspecs(cfg: ModelConfig, state: Any,
+                       rules: Dict[str, MeshAxes]) -> Any:
+    """PartitionSpecs for a serve.scheduler.DecodeState pytree.
+
+    The slot cache reuses the decode cache placement (slots are the batch
+    dim: (L, B_slots, S_max, K, hd) with kv_seq split-KV over "model");
+    per-slot bookkeeping vectors (cur/pos/remaining/forced*) ride the same
+    batch axis so scheduler masks stay local to the slot's shard, and the
+    PRNG key replicates.  Built for the launch drivers: on a mesh, jit the
+    decode chunk with these as in/out shardings (donated state keeps the
+    placement stable across chunks).
+    """
+    from repro.serve.scheduler import DecodeState
+
+    assert isinstance(state, DecodeState)
+    b = rules.get("batch")
+    slot = lambda a: P(*((b,) + (None,) * (a.ndim - 1)))
+    return DecodeState(
+        cache=cache_pspecs(cfg, state.cache, rules),
+        cur=slot(state.cur),
+        pos=slot(state.pos),
+        remaining=slot(state.remaining),
+        forced=slot(state.forced),
+        forced_n=slot(state.forced_n),
+        forced_i=slot(state.forced_i),
+        key=P(None),
+    )

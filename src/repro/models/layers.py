@@ -92,7 +92,8 @@ def _project_qkv(p: dict, x: jax.Array, cfg: ModelConfig):
 
 
 def _gqa_scores_softmax_out(q, k, v, mask, scale):
-    """q: (B,Sq,K,R,hd); k,v: (B,Sk,K,hd); mask: (Sq,Sk) bool or None.
+    """q: (B,Sq,K,R,hd); k,v: (B,Sk,K,hd); mask: bool, broadcastable to
+    the (B,K,R,Sq,Sk) score tensor, or None.
     Grouped form used on the decode path (reads each KV head once)."""
     s = jnp.einsum("bqkrh,bskh->bkrqs", q, k).astype(jnp.float32) * scale
     if mask is not None:
@@ -182,12 +183,17 @@ def decode_attention(p: dict, x: jax.Array, cfg: ModelConfig,
     """Single-token decode against a KV cache.
 
     cache: {"k": (B, S_max, K, hd), "v": ...}; ``index`` is the current
-    position (scalar).  Returns (out (B,1,d), updated cache).
+    position — a scalar (whole batch at the same position, the classic
+    synchronized-decode path) or a (B,) vector of per-slot positions (the
+    continuous-batching path: every slot writes its KV row at its own
+    position and attends under its own causal mask).
+    Returns (out (B,1,d), updated cache).
     """
     B, one, _ = x.shape
     hd = cfg.resolved_head_dim
     H, K = cfg.num_heads, cfg.num_kv_heads
     R = H // K
+    per_slot = jnp.ndim(index) == 1
     q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
     kn = jnp.einsum("bsd,dh->bsh", x, p["wk"])
     vn = jnp.einsum("bsd,dh->bsh", x, p["wv"])
@@ -196,18 +202,28 @@ def decode_attention(p: dict, x: jax.Array, cfg: ModelConfig,
     q = q.reshape(B, 1, H, hd)
     kn = kn.reshape(B, 1, K, hd)
     vn = vn.reshape(B, 1, K, hd)
-    pos = jnp.full((1,), index, jnp.int32)
+    pos = (index[:, None].astype(jnp.int32) if per_slot
+           else jnp.full((1,), index, jnp.int32))
     q = rope(q, pos, cfg.rope_theta)
     kn = rope(kn, pos, cfg.rope_theta)
-    k = jax.lax.dynamic_update_slice(cache["k"], kn.astype(cache["k"].dtype),
-                                     (0, index, 0, 0))
-    v = jax.lax.dynamic_update_slice(cache["v"], vn.astype(cache["v"].dtype),
-                                     (0, index, 0, 0))
+    if per_slot:
+        slots = jnp.arange(B, dtype=jnp.int32)
+        k = cache["k"].at[slots, index].set(kn[:, 0].astype(cache["k"].dtype))
+        v = cache["v"].at[slots, index].set(vn[:, 0].astype(cache["v"].dtype))
+    else:
+        k = jax.lax.dynamic_update_slice(
+            cache["k"], kn.astype(cache["k"].dtype), (0, index, 0, 0))
+        v = jax.lax.dynamic_update_slice(
+            cache["v"], vn.astype(cache["v"].dtype), (0, index, 0, 0))
     k = shard(k, "batch", "kv_seq", "kv_heads", None)
     v = shard(v, "batch", "kv_seq", "kv_heads", None)
     S = k.shape[1]
     qg = q.reshape(B, 1, K, R, hd)
-    mask = (jnp.arange(S) <= index)[None, :]
+    if per_slot:
+        mask = (jnp.arange(S)[None, :] <= index[:, None]
+                )[:, None, None, None, :]                # (B,1,1,1,S)
+    else:
+        mask = (jnp.arange(S) <= index)[None, :]         # (1,S) -> broadcast
     o = _gqa_scores_softmax_out(qg, k, v, mask, 1.0 / math.sqrt(hd))
     o = o.reshape(B, 1, H * hd)
     out = jnp.einsum("bsh,hd->bsd", o, p["wo"])

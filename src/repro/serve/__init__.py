@@ -1,0 +1,21 @@
+"""Serving subsystem: continuous batching over a fixed slot cache.
+
+Layering:
+  prefix_cache.py — count-min (CSVec) gated prefix-KV admission under a
+                    hard byte budget
+  scheduler.py    — slot scheduler + the single compiled lax.scan decode
+                    chunk with per-slot position/active/forced masks
+  engine.py       — ServeEngine facade (batched generate API; synchronized
+                    fallback for recurrent-state families)
+"""
+from repro.serve.engine import GenerationResult, ServeEngine, seed_cache
+from repro.serve.prefix_cache import (PrefixCacheStats, SketchPrefixCache,
+                                      prefix_key)
+from repro.serve.scheduler import (KV_FAMILIES, Completion, DecodeState,
+                                   Request, SlotScheduler)
+
+__all__ = [
+    "GenerationResult", "ServeEngine", "seed_cache",
+    "PrefixCacheStats", "SketchPrefixCache", "prefix_key",
+    "KV_FAMILIES", "Completion", "DecodeState", "Request", "SlotScheduler",
+]

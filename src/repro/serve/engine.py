@@ -1,22 +1,34 @@
-"""Batched serving engine: prefill + incremental decode over a KV cache.
+"""Serving engine facade over the continuous-batching slot scheduler.
 
-The decode step is the jitted ``serve_step`` the dry-run lowers; this engine
-adds request batching, greedy/temperature sampling, and cache management on
-top.  Long-context decode relies on the split-KV sharding rules
-(launch/shardings.decode_rules) when run under a mesh.
+``ServeEngine.generate`` keeps the classic batched-generation API (a (B, S)
+prompt matrix in, a (B, max_new) token matrix out) but is now implemented on
+top of ``serve.scheduler.SlotScheduler``: requests are admitted into a
+fixed-geometry slot cache, decode is ONE compiled ``lax.scan`` chunk for the
+engine's lifetime, and repeated prompts are served through the count-min
+gated prefix cache.  The old per-request cache-regrow hack
+(``_grow_cache``) is gone — the cache is preallocated at
+(L, max_batch, max_seq, K, hd) and never reshaped.
+
+Recurrent-state families (ssm / hybrid) have no per-position KV rows to
+slot-schedule, so they use a synchronized decode loop: prefill once, seed a
+full-size preallocated cache (``seed_cache`` — equal-shape state leaves are
+taken wholesale, seq-extent leaves are inserted at position 0), then step
+the whole batch at a shared scalar position.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from dataclasses import dataclass
-from typing import List, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models import model as M
 from repro.models import transformer as tf
+from repro.serve.scheduler import KV_FAMILIES, Request, SlotScheduler
 
 
 @dataclass
@@ -25,37 +37,97 @@ class GenerationResult:
     prompt_len: int
 
 
+def seed_cache(full, pre):
+    """Copy a prefill cache into a preallocated max-length cache: leaves
+    with matching shapes (recurrent states) are taken from the prefill
+    wholesale; seq-extent leaves (e.g. hybrid shared_kv (G, B, S, K, hd))
+    are written at offset 0, with the tail left as zeros — those rows are
+    always rewritten by decode before any query can attend to them."""
+    def one(f, p):
+        if f.shape == p.shape:
+            return p.astype(f.dtype)
+        return jax.lax.dynamic_update_slice(
+            f, p.astype(f.dtype), (0,) * f.ndim)
+    return jax.tree.map(one, full, pre)
+
+
 class ServeEngine:
-    def __init__(self, cfg: ModelConfig, params, max_seq: int = 512):
+    def __init__(self, cfg: ModelConfig, params, max_seq: int = 512,
+                 max_batch: Optional[int] = None):
         self.cfg = cfg
         self.params = params
         self.max_seq = max_seq
-        self._decode = jax.jit(
-            functools.partial(tf.decode_step, cfg=cfg), donate_argnums=(1,))
-        self._prefill = jax.jit(functools.partial(tf.prefill, cfg=cfg))
+        self.max_batch = max_batch
+        self._schedulers = {}        # (B, temperature) -> SlotScheduler
+        self._rid = 0
+        if cfg.family not in KV_FAMILIES:
+            self._decode = jax.jit(
+                functools.partial(tf.decode_step, cfg=cfg),
+                donate_argnums=(1,))
+            self._prefill = jax.jit(functools.partial(tf.prefill, cfg=cfg))
+            self._seed_cache = jax.jit(seed_cache, donate_argnums=(0,))
 
-    def _grow_cache(self, cache, cur_len: int):
-        """Pad attention caches from prompt length to max_seq slots."""
-        pad = self.max_seq - cur_len
-        if pad <= 0:
-            return cache
+    # ------------------------------------------------------------------
 
-        def grow(path, leaf):
-            name = str(path[-1])
-            if leaf.ndim == 5 and leaf.shape[2] == cur_len:  # (L,B,S,K,hd)
-                return jnp.pad(leaf, ((0, 0), (0, 0), (0, pad),
-                                      (0, 0), (0, 0)))
-            return leaf
-        return jax.tree_util.tree_map_with_path(grow, cache)
+    def _scheduler(self, batch: int, temperature: float) -> SlotScheduler:
+        """One scheduler per (max_batch, temperature): the decode chunk is
+        specialized on both, and reusing it across generate() calls is what
+        keeps the compile count at one (and lets the prefix cache warm up
+        across calls).  If ``self.params`` has been swapped (e.g. a
+        checkpoint was loaded), every cached scheduler is dropped — its
+        prefix cache holds KV blocks computed from the old weights, so
+        serving them would silently mix models."""
+        if self._schedulers and next(
+                iter(self._schedulers.values())).params is not self.params:
+            self._schedulers.clear()
+        kb = self.max_batch or batch
+        sk = (kb, float(temperature))
+        if sk not in self._schedulers:
+            serve = dataclasses.replace(
+                self.cfg.serve, max_batch=kb, max_seq=self.max_seq)
+            self._schedulers[sk] = SlotScheduler(
+                self.cfg, self.params, serve=serve, temperature=temperature)
+        return self._schedulers[sk]
 
     def generate(self, tokens: jax.Array, max_new: int = 32,
                  temperature: float = 0.0,
                  key: Optional[jax.Array] = None) -> GenerationResult:
-        """tokens: (B, S) prompt ids.  Greedy when temperature == 0."""
+        """tokens: (B, S) prompt ids.  Greedy when temperature == 0.
+        When sampling (temperature > 0) and no key is given, a PRNGKey
+        seeded from cfg.serve.seed is used — sampling without a key is a
+        valid request, not a crash."""
         B, S = tokens.shape
         assert S + max_new <= self.max_seq
-        logits, cache = self._prefill(self.params, {"tokens": tokens})
-        cache = self._grow_cache(cache, S)
+        if self.cfg.family in KV_FAMILIES:
+            return self._generate_slots(tokens, max_new, temperature, key)
+        return self._generate_sync(tokens, max_new, temperature, key)
+
+    # -- continuous-batching path (attention families) -------------------
+
+    def _generate_slots(self, tokens, max_new, temperature, key):
+        B, S = tokens.shape
+        sched = self._scheduler(B, temperature)
+        if key is not None:
+            sched.reseed(key)
+        prompts = np.asarray(tokens, np.int32)
+        reqs = []
+        for b in range(B):
+            reqs.append(Request(rid=self._rid, tokens=prompts[b],
+                                max_new=max_new))
+            self._rid += 1
+        done = {c.rid: c for c in sched.run(reqs)}
+        out = np.stack([done[r.rid].tokens for r in reqs])
+        return GenerationResult(tokens=jnp.asarray(out), prompt_len=S)
+
+    # -- synchronized fallback (recurrent-state families) -----------------
+
+    def _generate_sync(self, tokens, max_new, temperature, key):
+        B, S = tokens.shape
+        if temperature > 0.0 and key is None:
+            key = jax.random.PRNGKey(self.cfg.serve.seed)
+        logits, pre = self._prefill(self.params, {"tokens": tokens})
+        cache = self._seed_cache(tf.init_cache(self.cfg, B, self.max_seq),
+                                 pre)
         out = []
         cur = None
         for t in range(max_new):
@@ -73,3 +145,15 @@ class ServeEngine:
             cur = nxt[:, None].astype(jnp.int32)
             out.append(nxt)
         return GenerationResult(tokens=jnp.stack(out, axis=1), prompt_len=S)
+
+    # ------------------------------------------------------------------
+
+    @property
+    def decode_compilations(self) -> int:
+        """Total decode-step compilations across all live schedulers."""
+        return sum(s.decode_compilations
+                   for s in self._schedulers.values())
+
+    def prefix_cache_stats(self):
+        return {k: s.prefix_cache.stats
+                for k, s in self._schedulers.items()}

@@ -1,0 +1,186 @@
+"""Sketch-gated prefix KV cache: count-min admission over prompt prefixes.
+
+Production prompt streams are heavy-tailed — a few system/template prefixes
+recur across millions of requests while the long tail is unique.  Caching
+every prefill's KV would blow the budget on one-shot prompts, and tracking
+exact per-prefix frequencies needs state proportional to unique-prompt
+cardinality.  This module uses the same O(table)-storage hash machinery the
+paper builds CS/FCS on (and that HCS motivates for multi-dimensional
+lookups): prefix hashes are counted in a CSVec count-min table
+(sketch/csvec.py, ``signed=False``), and a prefill's KV block is admitted to
+the bounded cache only once its estimated frequency clears
+``admit_threshold``.  Count-min's one-sided overestimate makes admission
+*safe* — a hot prefix is never starved, a cold one is at worst admitted a
+little early — while the tracker stays O(rows * cols) forever.
+
+Granularity: block-multiple prefixes.  Every observed prompt increments the
+count of each of its block-multiple prefixes in one batched
+``accumulate_coords`` call, so two long prompts sharing a 32-token system
+preamble both feed the same prefix keys even when their total lengths
+differ.  Admission picks the LONGEST prefix over threshold.  Counts are
+periodically aged (``decay``) TinyLFU-style so stale heavy hitters fade.
+
+Eviction is plain LRU under a hard byte budget — the sketch gates what gets
+*in*, the budget bounds what *stays*.
+"""
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs.base import ServeConfig
+from repro.sketch import csvec
+
+# count-min key domain: prefix hashes land in [0, CM_DOMAIN)
+CM_DOMAIN = 1 << 20
+
+
+def prefix_key(tokens: np.ndarray) -> int:
+    """Stable 64-bit hash of a token prefix (process-salt-free)."""
+    h = hashlib.blake2b(np.ascontiguousarray(tokens, np.int32).tobytes(),
+                        digest_size=8)
+    return int.from_bytes(h.digest(), "little")
+
+
+@dataclass
+class PrefixCacheStats:
+    lookups: int = 0
+    hits: int = 0
+    misses: int = 0
+    admitted: int = 0
+    evicted: int = 0
+    rejected: int = 0            # observed prefixes still under threshold
+    bytes: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / max(self.lookups, 1)
+
+
+@dataclass
+class _Entry:
+    block: Any                   # np KV pytree, leaves (L, 1, plen, K, hd)
+    nbytes: int
+
+
+def _tree_nbytes(tree: Any) -> int:
+    return sum(int(a.size) * int(a.dtype.itemsize)
+               for a in jax.tree.leaves(tree))
+
+
+@dataclass
+class SketchPrefixCache:
+    cfg: ServeConfig
+    stats: PrefixCacheStats = field(default_factory=PrefixCacheStats)
+
+    def __post_init__(self):
+        self._cm = csvec.csvec_zeros(
+            CM_DOMAIN, cols=self.cfg.cm_cols, rows=self.cfg.cm_rows,
+            seed=self.cfg.seed, signed=False)
+        self._entries: "OrderedDict[Tuple[int, ...], _Entry]" = OrderedDict()
+        self._observed = 0
+
+    # -- read path ---------------------------------------------------------
+    def lookup(self, tokens: np.ndarray, max_suffix: int
+               ) -> Optional[Tuple[int, Any]]:
+        """Longest cached block-multiple prefix of ``tokens`` whose
+        remaining suffix is at most ``max_suffix`` tokens (the engine
+        forced-decodes the suffix one token per step, so a hit that leaves
+        a huge suffix is slower than re-prefilling — treat it as a miss).
+        Returns (prefix_len, np KV block) and refreshes LRU recency."""
+        self.stats.lookups += 1
+        block = self.cfg.prefix_block
+        n = len(tokens)
+        for m in range(n // block, 0, -1):
+            plen = m * block
+            if n - plen > max_suffix:
+                continue
+            key = tuple(int(t) for t in tokens[:plen])
+            ent = self._entries.get(key)
+            if ent is not None:
+                self._entries.move_to_end(key)
+                self.stats.hits += 1
+                return plen, ent.block
+        self.stats.misses += 1
+        return None
+
+    # -- write path --------------------------------------------------------
+    def _count(self, tokens: np.ndarray) -> Optional[np.ndarray]:
+        """Increment the count-min frequency of every block-multiple
+        prefix of ``tokens`` (one batched accumulate) and return the
+        estimated counts, aging the table on the decay cadence."""
+        block = self.cfg.prefix_block
+        n_blocks = len(tokens) // block
+        if n_blocks == 0:
+            return None
+        keys = np.array(
+            [prefix_key(tokens[:m * block]) % CM_DOMAIN
+             for m in range(1, n_blocks + 1)], np.int32)
+        self._cm = csvec.accumulate_coords(
+            self._cm, keys, np.ones(len(keys), np.float32))
+        counts = np.asarray(csvec.query(self._cm, keys))
+        self._observed += 1
+        if self._observed % self.cfg.cm_decay_every == 0:
+            self._cm = csvec.decay(self._cm, self.cfg.cm_decay)
+        return counts
+
+    def touch(self, tokens: np.ndarray) -> None:
+        """Count a prompt that was served from the cache.  Hits must keep
+        feeding the frequency sketch (classic TinyLFU counts every
+        access): otherwise a steadily-hit prefix's count freezes, decays
+        toward zero, and after an eventual LRU eviction the hottest
+        prefix in the stream would have to re-earn admission from
+        scratch."""
+        self._count(tokens)
+
+    def observe(self, tokens: np.ndarray) -> Optional[int]:
+        """Count an observed (missed) prompt and return the longest
+        prefix length whose estimated frequency clears the admission
+        threshold and is not already cached — the caller should then
+        ``admit`` its KV block.  Returns None when nothing qualifies."""
+        counts = self._count(tokens)
+        if counts is None:
+            return None
+        block = self.cfg.prefix_block
+        n_blocks = len(counts)
+        for m in range(n_blocks, 0, -1):
+            if counts[m - 1] >= self.cfg.admit_threshold:
+                key = tuple(int(t) for t in tokens[:m * block])
+                if key not in self._entries:
+                    return m * block
+                return None          # longest qualifying prefix already in
+        self.stats.rejected += 1
+        return None
+
+    def admit(self, tokens: np.ndarray, plen: int, kv_block: Any) -> None:
+        """Store the KV block for ``tokens[:plen]`` (host copies, so the
+        byte accounting is exact and entries survive donated device
+        buffers), then evict LRU entries until under budget."""
+        blk = jax.tree.map(lambda a: np.asarray(a), kv_block)
+        nbytes = _tree_nbytes(blk)
+        if nbytes > self.cfg.prefix_cache_bytes:
+            return                   # one block can never fit: don't thrash
+        key = tuple(int(t) for t in tokens[:plen])
+        if key in self._entries:
+            return
+        self._entries[key] = _Entry(block=blk, nbytes=nbytes)
+        self.stats.bytes += nbytes
+        self.stats.admitted += 1
+        while self.stats.bytes > self.cfg.prefix_cache_bytes:
+            _, old = self._entries.popitem(last=False)
+            self.stats.bytes -= old.nbytes
+            self.stats.evicted += 1
+
+    # -- introspection -----------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def tracker_bytes(self) -> int:
+        """Bytes held by the count-min frequency tracker (O(table),
+        independent of how many unique prompts were observed)."""
+        return csvec.state_bytes(self._cm)

@@ -1,0 +1,315 @@
+"""Continuous-batching slot scheduler over a fixed preallocated KV cache.
+
+The engine owns ``max_batch`` slots backed by one (L, max_batch, max_seq,
+K, hd) KV cache allocated up front — no cache regrowth, ever.  Decode runs
+as ONE jitted function for the engine's lifetime: a ``jax.lax.scan`` of
+``decode_chunk`` single-token steps over fixed shapes, with per-slot
+position / active / forced masks doing the work that used to require
+per-request shapes.  Requests of arbitrary (mixed) prompt lengths are
+admitted into free slots between chunks and retired when their token budget
+is spent; the decode step therefore compiles exactly once per engine (see
+``decode_compilations``), while prefill compiles once per prompt-length
+bucket (``cfg.serve.prefill_bucket``).
+
+Slot-uniform decode semantics (all shape-static):
+
+  * every slot decodes every step; inactive slots re-write their own stale
+    KV row, which is harmless: a row at position p is always (re)written
+    before any query attends to p (the mask allows positions <= pos, and
+    pos advances only after the write), so junk is never observed.
+  * a freshly admitted request resumes at ``pos = prefill_len - 1`` by
+    re-feeding its last prompt token: the recomputed KV row is identical
+    (it depends only on that token's residual stream) and the resulting
+    logits sample the first output token in-graph — prefill logits never
+    cross the host boundary.
+  * prompt tokens not covered by a prefix-cache hit are *forced*: the
+    per-slot forced queue overrides sampling and suppresses emission until
+    exhausted, which is how a cached prefix + uncached suffix runs through
+    the same compiled decode step.
+
+Prefix reuse is gated by the count-min admission filter in
+serve/prefix_cache.py.  Supported families: those with a (L, B, S, K, hd)
+"kv" cache (dense / moe / audio / vlm); recurrent-state families are
+served by the synchronized fallback in serve/engine.py.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ServeConfig
+from repro.models import transformer as tf
+from repro.serve.prefix_cache import SketchPrefixCache
+
+KV_FAMILIES = ("dense", "moe", "audio", "vlm")
+
+
+@dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray           # (S,) int32 prompt
+    max_new: int
+
+
+@dataclass
+class Completion:
+    rid: int
+    prompt_len: int
+    tokens: np.ndarray           # (max_new,) int32 generated
+    prefix_hit: bool
+
+
+class DecodeState(NamedTuple):
+    """All device-resident engine state (a pytree; see
+    launch.shardings.serve_state_pspecs for its mesh placement)."""
+    cache: Dict[str, Any]        # {"kv": {"k": (L,B,Smax,K,hd), "v": ...}}
+    cur: jax.Array               # (B, 1) next token to feed per slot
+    pos: jax.Array               # (B,)  write/attend position per slot
+    remaining: jax.Array         # (B,)  output tokens still owed per slot
+    forced: jax.Array            # (B, F) teacher-forced prompt suffixes
+    forced_n: jax.Array          # (B,)  forced-queue length per slot
+    forced_i: jax.Array          # (B,)  forced-queue cursor per slot
+    key: jax.Array               # (2,)  sampling PRNG key
+
+
+def _bucket(n: int, bucket: int) -> int:
+    return -(-n // bucket) * bucket
+
+
+class SlotScheduler:
+    def __init__(self, cfg: ModelConfig, params: Any,
+                 serve: Optional[ServeConfig] = None,
+                 temperature: float = 0.0):
+        if cfg.family not in KV_FAMILIES:
+            raise ValueError(
+                f"SlotScheduler needs a kv cache family, got {cfg.family!r}")
+        self.cfg = cfg
+        self.params = params
+        self.serve = serve if serve is not None else cfg.serve
+        self.temperature = float(temperature)
+        sv = self.serve
+        B = sv.max_batch
+        # cap on the uncached suffix a prefix hit may leave (it is
+        # forced-decoded one token per step) and on the forced-queue
+        # width; decoupled from prefill padding so prefill_bucket=1
+        # (exact-length prefill, e.g. for moe) keeps hits possible.
+        self.max_suffix = max(sv.prefill_bucket, sv.prefix_block)
+        self.prefix_cache = SketchPrefixCache(sv)
+        self._queue: List[Request] = []
+        self._slot_req: List[Optional[Request]] = [None] * B
+        self._slot_out: List[List[int]] = [[] for _ in range(B)]
+        self._slot_hit: List[bool] = [False] * B
+        self.decode_steps = 0
+        self.completed: List[Completion] = []
+
+        self._state = DecodeState(
+            cache=tf.init_cache(cfg, B, sv.max_seq),
+            cur=jnp.zeros((B, 1), jnp.int32),
+            pos=jnp.zeros((B,), jnp.int32),
+            remaining=jnp.zeros((B,), jnp.int32),
+            forced=jnp.zeros((B, self.max_suffix), jnp.int32),
+            forced_n=jnp.zeros((B,), jnp.int32),
+            forced_i=jnp.zeros((B,), jnp.int32),
+            key=jax.random.PRNGKey(sv.seed),
+        )
+        self._chunk_fn = jax.jit(self._make_chunk(), donate_argnums=(1,))
+        self._prefill = jax.jit(functools.partial(tf.prefill, cfg=cfg))
+        self._insert_fn = jax.jit(self._insert_kv, donate_argnums=(0,))
+
+    # ------------------------------------------------------------------
+    # Compiled pieces
+    # ------------------------------------------------------------------
+
+    def _make_chunk(self):
+        cfg = self.cfg
+        temp = self.temperature
+        chunk = self.serve.decode_chunk
+
+        def chunk_fn(params, state: DecodeState):
+            forced, forced_n = state.forced, state.forced_n
+
+            def step(carry, _):
+                cache, cur, pos, remaining, forced_i, key = carry
+                is_forced = forced_i < forced_n
+                running = (remaining > 0) | is_forced
+                logits, cache = tf.decode_step(params, cache, cur, pos, cfg)
+                lg = logits[:, :cfg.vocab_size]
+                if temp > 0.0:
+                    key, k = jax.random.split(key)
+                    sampled = jax.random.categorical(k, lg / temp, axis=-1)
+                else:
+                    sampled = jnp.argmax(lg, axis=-1)
+                sampled = sampled.astype(jnp.int32)
+                ftok = jnp.take_along_axis(
+                    forced,
+                    jnp.clip(forced_i, 0, forced.shape[1] - 1)[:, None],
+                    axis=1)[:, 0]
+                nxt = jnp.where(is_forced, ftok, sampled)
+                emit = running & ~is_forced
+                pos = pos + running.astype(jnp.int32)
+                remaining = remaining - emit.astype(jnp.int32)
+                forced_i = forced_i + is_forced.astype(jnp.int32)
+                return (cache, nxt[:, None], pos, remaining, forced_i, key), \
+                    (nxt, emit)
+
+            carry = (state.cache, state.cur, state.pos, state.remaining,
+                     state.forced_i, state.key)
+            (cache, cur, pos, remaining, forced_i, key), (toks, emits) = \
+                jax.lax.scan(step, carry, None, length=chunk)
+            new_state = DecodeState(cache=cache, cur=cur, pos=pos,
+                                    remaining=remaining, forced=forced,
+                                    forced_n=forced_n, forced_i=forced_i,
+                                    key=key)
+            return new_state, toks, emits        # toks/emits: (chunk, B)
+
+        return chunk_fn
+
+    @staticmethod
+    def _insert_kv(cache, block, slot):
+        """Write a prefill KV block ({"k","v"} leaves (L, 1, S_b, K, hd))
+        into slot ``slot`` of the full cache at positions [0, S_b)."""
+        def one(c, b):
+            return jax.lax.dynamic_update_slice(
+                c, b.astype(c.dtype), (0, slot, 0, 0, 0))
+        return {**cache, "kv": jax.tree.map(one, cache["kv"], block)}
+
+    # ------------------------------------------------------------------
+    # Scheduling
+    # ------------------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        sv = self.serve
+        S = len(req.tokens)
+        assert req.max_new >= 1, "requests must ask for at least one token"
+        assert S >= 1, "empty prompt"
+        # the last write lands at position S - 1 + max_new (bucketed
+        # prefill is capped at max_seq in _admit)
+        assert S + req.max_new <= sv.max_seq, (
+            f"prompt {S} + max_new {req.max_new} exceeds max_seq "
+            f"{sv.max_seq}")
+        self._queue.append(req)
+
+    def reseed(self, key: jax.Array) -> None:
+        """Replace the sampling PRNG key (no-op for greedy decoding)."""
+        self._state = self._state._replace(key=key)
+
+    def _admit(self, slot: int, req: Request) -> None:
+        sv = self.serve
+        prompt = np.asarray(req.tokens, np.int32)
+        S = len(prompt)
+        hit = self.prefix_cache.lookup(prompt, max_suffix=self.max_suffix)
+        if hit is not None:
+            plen, block_np = hit
+            self.prefix_cache.touch(prompt)      # hits keep counts fresh
+            block = jax.tree.map(jnp.asarray, block_np)
+            forced_tail = prompt[plen:]          # fed after cur, may be empty
+        else:
+            admit_plen = self.prefix_cache.observe(prompt)
+            S_b = min(_bucket(S, sv.prefill_bucket), sv.max_seq)
+            padded = np.zeros((1, S_b), np.int32)
+            padded[0, :S] = prompt
+            _, pre = self._prefill(self.params, {"tokens": jnp.asarray(padded)})
+            block = pre["kv"]
+            if admit_plen is not None:
+                self.prefix_cache.admit(
+                    prompt, admit_plen,
+                    jax.tree.map(lambda a: a[:, :, :admit_plen], block))
+            plen = S
+            forced_tail = prompt[S:]             # empty
+        # resume at plen-1 by re-feeding the last covered prompt token: its
+        # KV row recomputes bit-identically and its logits feed the first
+        # forced/sampled step in-graph.
+        cur_tok = int(prompt[plen - 1])
+        start = plen - 1
+        fbuf = np.zeros((self.max_suffix,), np.int32)
+        fbuf[:len(forced_tail)] = forced_tail
+        st = self._state
+        st = st._replace(
+            cache=self._insert_fn(st.cache, block, jnp.int32(slot)),
+            cur=st.cur.at[slot, 0].set(cur_tok),
+            pos=st.pos.at[slot].set(start),
+            remaining=st.remaining.at[slot].set(req.max_new),
+            forced=st.forced.at[slot].set(jnp.asarray(fbuf)),
+            forced_n=st.forced_n.at[slot].set(len(forced_tail)),
+            forced_i=st.forced_i.at[slot].set(0),
+        )
+        self._state = st
+        self._slot_req[slot] = req
+        self._slot_out[slot] = []
+        self._slot_hit[slot] = hit is not None
+
+    def _retire(self) -> List[Completion]:
+        done: List[Completion] = []
+        remaining = np.asarray(self._state.remaining)
+        for s, req in enumerate(self._slot_req):
+            if req is not None and remaining[s] == 0:
+                done.append(Completion(
+                    rid=req.rid, prompt_len=len(req.tokens),
+                    tokens=np.asarray(self._slot_out[s][:req.max_new],
+                                      np.int32),
+                    prefix_hit=self._slot_hit[s]))
+                self._slot_req[s] = None
+                self._slot_out[s] = []
+        self.completed.extend(done)
+        return done
+
+    @property
+    def pending(self) -> bool:
+        """True while any request is queued or occupying a slot — the
+        public drain condition (``while sched.pending: sched.step()``)."""
+        return bool(self._queue) or any(
+            r is not None for r in self._slot_req)
+
+    def step(self) -> List[Completion]:
+        """One scheduler round: admit queued requests into free slots, run
+        one compiled decode chunk, collect emitted tokens, retire finished
+        requests.  Returns the requests completed this round."""
+        for s in range(self.serve.max_batch):
+            if self._slot_req[s] is None and self._queue:
+                self._admit(s, self._queue.pop(0))
+        if not any(r is not None for r in self._slot_req):
+            return []
+        self._state, toks, emits = self._chunk_fn(self.params, self._state)
+        self.decode_steps += self.serve.decode_chunk
+        toks = np.asarray(toks)
+        emits = np.asarray(emits)
+        for t in range(toks.shape[0]):
+            for s in range(toks.shape[1]):
+                if emits[t, s] and self._slot_req[s] is not None:
+                    self._slot_out[s].append(int(toks[t, s]))
+        return self._retire()
+
+    def run(self, requests: Optional[List[Request]] = None
+            ) -> List[Completion]:
+        """Drain: submit ``requests`` (if given) and step until every
+        queued and in-flight request has completed."""
+        for r in requests or []:
+            self.submit(r)
+        done: List[Completion] = []
+        while self.pending:
+            done.extend(self.step())
+        return done
+
+    # ------------------------------------------------------------------
+    # Introspection
+    # ------------------------------------------------------------------
+
+    @property
+    def decode_compilations(self) -> int:
+        """Number of times the chunked decode step has been compiled —
+        the engine's contract is that this is 1 for its whole lifetime,
+        regardless of the request mix."""
+        return self._chunk_fn._cache_size()
+
+    @property
+    def state(self) -> DecodeState:
+        return self._state
+
+    def kv_cache_bytes(self) -> int:
+        return sum(int(a.size) * int(a.dtype.itemsize)
+                   for a in jax.tree.leaves(self._state.cache))

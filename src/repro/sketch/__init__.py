@@ -9,8 +9,9 @@ Layering:
   optimizer.py — sketched AdamW / Adagrad over CSVec moment tables
 """
 from repro.sketch.csvec import (CSVec, accumulate, accumulate_coords,
-                                csvec_zeros, l2_estimate, merge, query,
-                                query_all, query_row, state_bytes, topk)
+                                csvec_zeros, decay, l2_estimate, merge,
+                                query, query_all, query_row, state_bytes,
+                                topk)
 from repro.sketch.optimizer import (DenseMoments, SketchedAdamWState,
                                     SketchedMoments, moment_state_bytes,
                                     sketched_adagrad_init,
@@ -19,7 +20,7 @@ from repro.sketch.optimizer import (DenseMoments, SketchedAdamWState,
                                     sketched_adamw_update)
 
 __all__ = [
-    "CSVec", "accumulate", "accumulate_coords", "csvec_zeros",
+    "CSVec", "accumulate", "accumulate_coords", "csvec_zeros", "decay",
     "l2_estimate", "merge", "query", "query_all", "query_row",
     "state_bytes", "topk",
     "DenseMoments", "SketchedMoments", "SketchedAdamWState",

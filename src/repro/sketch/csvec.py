@@ -155,6 +155,21 @@ def scale(sk: CSVec, alpha) -> CSVec:
     return dataclasses.replace(sk, table=sk.table * alpha)
 
 
+def decay(sk: CSVec, factor: float = 0.5) -> CSVec:
+    """Age the sketch: multiply all cells by ``factor`` (TinyLFU-style
+    periodic reset).  For a count-min table this halves every estimated
+    frequency while preserving the one-sided overestimate (min of scaled
+    rows == scaled min), so admission thresholds keep their meaning and
+    stale heavy hitters fade instead of occupying buckets forever.
+    Unsigned (count-min) tables floor to keep integer-count semantics —
+    a coordinate seen once and aged repeatedly decays to exactly zero
+    rather than lingering as dust."""
+    t = sk.table * jnp.float32(factor)
+    if not sk.signed:
+        t = jnp.floor(t)
+    return dataclasses.replace(sk, table=t)
+
+
 def state_bytes(sk: CSVec) -> int:
     """Persistent bytes: table + coefficients (hash tables are never
     materialized as state)."""

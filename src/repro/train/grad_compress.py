@@ -152,7 +152,11 @@ def make_compressed_train_step(cfg: ModelConfig, multi_pod: bool = False):
     ratio = cfg.sketch.grad_hash_ratio
     seed = cfg.sketch.seed
 
-    def apply_ef_tree(grads, ef, codecs_flat):
+    def apply_ef_tree(grads, ef, codecs_flat, key):
+        """Compress every codec'd leaf with the per-step hash key.  The key
+        is an explicit argument: it is trace-local state, and stashing it
+        on the function object (the old hack) is invisible to jit retracing
+        and racy under concurrent traces of the same closure."""
         gl, tdef = jax.tree.flatten(grads)
         el = jax.tree.leaves(ef)
         out_g, out_e = [], []
@@ -161,7 +165,7 @@ def make_compressed_train_step(cfg: ModelConfig, multi_pod: bool = False):
                 out_g.append(g)
                 out_e.append(e)
             else:
-                gh, en = compress_roundtrip(g, e, c, apply_ef_tree.key)
+                gh, en = compress_roundtrip(g, e, c, key)
                 out_g.append(gh)
                 out_e.append(en)
         return jax.tree.unflatten(tdef, out_g), jax.tree.unflatten(tdef, out_e)
@@ -170,8 +174,8 @@ def make_compressed_train_step(cfg: ModelConfig, multi_pod: bool = False):
         pspecs = jax.eval_shape(lambda p: p, params)
         _, codecs_flat = _leaf_codecs(pspecs, ratio, seed)
         loss, grads = jax.value_and_grad(M.loss_fn)(params, batch, cfg)
-        apply_ef_tree.key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
-        grads, ef = apply_ef_tree(grads, ef, codecs_flat)
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+        grads, ef = apply_ef_tree(grads, ef, codecs_flat, key)
         return loss, grads, ef
 
     return train_step

@@ -1,0 +1,229 @@
+"""Continuous-batching engine: slot-cache decode correctness against
+per-request full-context recompute, single decode compilation for mixed
+request streams, count-min gated prefix caching, and the sampling-key
+regression."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import reduced_config
+from repro.models import layers as ly
+from repro.models import model as M
+from repro.models import transformer as tf
+from repro.serve.engine import ServeEngine
+from repro.serve.prefix_cache import SketchPrefixCache
+from repro.serve.scheduler import Request, SlotScheduler
+from repro.sketch import csvec
+
+
+@pytest.fixture(scope="module")
+def gemma():
+    cfg = reduced_config("gemma-2b")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _oracle_continuation(cfg, params, prompt: np.ndarray, n: int):
+    """Teacher-forced greedy continuation via full-context recompute."""
+    seq = jnp.asarray(prompt, jnp.int32)[None, :]
+    out = []
+    for _ in range(n):
+        y, _, _ = tf.forward(params, tf.embed_inputs(
+            params, {"tokens": seq}, cfg), cfg, mode="train")
+        lg = ly.logits_fn(params, y[:, -1:], cfg)[:, 0, :cfg.vocab_size]
+        nxt = int(jnp.argmax(lg, axis=-1)[0])
+        out.append(nxt)
+        seq = jnp.concatenate(
+            [seq, jnp.full((1, 1), nxt, jnp.int32)], axis=1)
+    return out
+
+
+def test_mixed_length_stream_matches_recompute_and_compiles_once(gemma):
+    """The tentpole contract: a stream of mixed-length, mixed-budget
+    requests through the padded/masked slot cache decodes token-for-token
+    identically to per-request full-context recompute (this pins down what
+    the old _grow_cache heuristic provided), while the decode step
+    compiles exactly once (jit cache stats)."""
+    cfg, params = gemma
+    serve = dataclasses.replace(cfg.serve, max_batch=3, max_seq=96,
+                                decode_chunk=4, prefill_bucket=16)
+    sched = SlotScheduler(cfg, params, serve=serve)
+    rng = np.random.RandomState(0)
+    lens = [5, 16, 9, 23, 31, 12]
+    reqs = [Request(rid=i,
+                    tokens=rng.randint(0, cfg.vocab_size, (n,)).astype(
+                        np.int32),
+                    max_new=3 + i % 3)
+            for i, n in enumerate(lens)]
+    done = {c.rid: c for c in sched.run(list(reqs))}
+    assert len(done) == len(reqs)
+    for r in reqs:
+        ref = _oracle_continuation(cfg, params, r.tokens, r.max_new)
+        np.testing.assert_array_equal(done[r.rid].tokens, ref,
+                                      err_msg=f"rid {r.rid}")
+    assert sched.decode_compilations == 1
+
+
+def test_prefix_cache_hit_path_matches_miss_path(gemma):
+    """Count-min admission: a repeated prompt is admitted once its
+    estimated frequency clears the threshold, later requests hit, and the
+    hit path (cached KV + forced suffix decode) reproduces the miss path
+    exactly.  Decode stays at one compilation throughout."""
+    cfg, params = gemma
+    serve = dataclasses.replace(cfg.serve, max_batch=2, max_seq=96,
+                                prefill_bucket=16, prefix_block=16,
+                                admit_threshold=2)
+    sched = SlotScheduler(cfg, params, serve=serve)
+    rng = np.random.RandomState(1)
+    prompt = rng.randint(0, cfg.vocab_size, (21,)).astype(np.int32)
+    outs = []
+    for i in range(4):
+        done = sched.run([Request(rid=i, tokens=prompt, max_new=5)])
+        outs.append(done[0].tokens)
+    st = sched.prefix_cache.stats
+    assert st.admitted >= 1
+    assert st.hits >= 1
+    assert sched.run(
+        [Request(rid=99, tokens=prompt, max_new=5)])[0].prefix_hit
+    for o in outs[1:]:
+        np.testing.assert_array_equal(o, outs[0])
+    np.testing.assert_array_equal(
+        outs[0], _oracle_continuation(cfg, params, prompt, 5))
+    assert sched.decode_compilations == 1
+
+
+def test_prefix_cache_respects_byte_budget(gemma):
+    """LRU eviction keeps cached KV bytes at or under the configured
+    budget no matter how many prefixes qualify for admission."""
+    cfg, params = gemma
+    serve = dataclasses.replace(cfg.serve, max_batch=2, max_seq=96,
+                                prefill_bucket=16, prefix_block=16,
+                                admit_threshold=1,
+                                prefix_cache_bytes=6 * 1024)
+    sched = SlotScheduler(cfg, params, serve=serve)
+    rng = np.random.RandomState(2)
+    for i in range(6):
+        prompt = rng.randint(0, cfg.vocab_size, (16,)).astype(np.int32)
+        sched.run([Request(rid=i, tokens=prompt, max_new=2)])
+    st = sched.prefix_cache.stats
+    assert st.admitted >= 2
+    assert st.evicted >= 1
+    assert st.bytes <= serve.prefix_cache_bytes
+    # recompute from entries agrees with the running counter
+    live = sum(e.nbytes for e in sched.prefix_cache._entries.values())
+    assert live == st.bytes
+
+
+def test_exact_length_prefill_still_hits(gemma):
+    """prefill_bucket=1 (exact-length prefill, the documented moe setting)
+    must not disable prefix-cache hits: the forced-suffix capacity is
+    governed by prefix_block, not the prefill padding granularity."""
+    cfg, params = gemma
+    serve = dataclasses.replace(cfg.serve, max_batch=2, max_seq=96,
+                                prefill_bucket=1, prefix_block=8,
+                                admit_threshold=2)
+    sched = SlotScheduler(cfg, params, serve=serve)
+    rng = np.random.RandomState(3)
+    prompt = rng.randint(0, cfg.vocab_size, (13,)).astype(np.int32)
+    outs = [sched.run([Request(rid=i, tokens=prompt, max_new=4)])[0]
+            for i in range(4)]
+    assert sched.prefix_cache.stats.hits >= 1
+    assert outs[-1].prefix_hit
+    for o in outs[1:]:
+        np.testing.assert_array_equal(o.tokens, outs[0].tokens)
+    np.testing.assert_array_equal(
+        outs[0].tokens, _oracle_continuation(cfg, params, prompt, 4))
+
+
+def test_param_swap_invalidates_schedulers(gemma):
+    """Swapping engine.params (checkpoint load) must rebuild schedulers:
+    the old ones closed over stale weights and cached stale prefix KV."""
+    cfg, _ = gemma
+    p1 = M.init_params(jax.random.PRNGKey(10), cfg)
+    p2 = M.init_params(jax.random.PRNGKey(11), cfg)
+    prompts = jax.random.randint(jax.random.PRNGKey(4), (2, 12), 0,
+                                 cfg.vocab_size)
+    engine = ServeEngine(cfg, p1, max_seq=64)
+    engine.generate(prompts, max_new=4)
+    engine.params = p2
+    swapped = engine.generate(prompts, max_new=4).tokens
+    fresh = ServeEngine(cfg, p2, max_seq=64).generate(
+        prompts, max_new=4).tokens
+    np.testing.assert_array_equal(np.asarray(swapped), np.asarray(fresh))
+
+
+def test_generate_temperature_without_key(gemma):
+    """Regression: temperature > 0 with key=None used to crash in
+    jax.random.split(None); it must fall back to a seeded PRNGKey."""
+    cfg, params = gemma
+    engine = ServeEngine(cfg, params, max_seq=64)
+    prompts = jnp.ones((2, 8), jnp.int32)
+    res = engine.generate(prompts, max_new=4, temperature=0.7)
+    assert res.tokens.shape == (2, 4)
+    assert int(res.tokens.max()) < cfg.vocab_size
+    # and an explicit key is still honored
+    res2 = engine.generate(prompts, max_new=4, temperature=0.7,
+                           key=jax.random.PRNGKey(3))
+    assert res2.tokens.shape == (2, 4)
+
+
+def test_recurrent_fallback_no_temperature_crash():
+    cfg = reduced_config("xlstm-1.3b")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    engine = ServeEngine(cfg, params, max_seq=32)
+    res = engine.generate(jnp.ones((2, 6), jnp.int32), max_new=3,
+                          temperature=0.9)
+    assert res.tokens.shape == (2, 3)
+
+
+def test_countmin_decay_ages_counts():
+    """decay() halves count-min estimates (floored to keep integer-count
+    semantics) and preserves the one-sided overestimate."""
+    sk = csvec.csvec_zeros(1 << 16, cols=64, rows=4, signed=False)
+    idx = np.arange(10, dtype=np.int32)
+    for _ in range(4):
+        sk = csvec.accumulate_coords(sk, idx, np.ones(10, np.float32))
+    before = np.asarray(csvec.query(sk, idx))
+    assert (before >= 4).all()          # overestimate: never undercounts
+    aged = csvec.decay(sk, 0.5)
+    after = np.asarray(csvec.query(aged, idx))
+    assert (after <= before // 2 + 1).all() and (after >= 2).all()
+    # a once-seen coordinate decays to exactly zero, not dust
+    one = csvec.accumulate_coords(
+        csvec.csvec_zeros(1 << 16, cols=64, rows=4, signed=False),
+        np.array([7], np.int32), np.ones(1, np.float32))
+    for _ in range(2):
+        one = csvec.decay(one, 0.5)
+    assert float(csvec.query(one, np.array([7], np.int32))[0]) == 0.0
+
+
+def test_serve_state_pspecs():
+    """Slot-cache decode specs: kv leaves split-KV over model on the seq
+    axis, per-slot vectors on the batch axis, key replicated."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.shardings import serve_state_pspecs
+    from repro.models.sharding import decode_rules
+
+    cfg = reduced_config("gemma-2b")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    serve = dataclasses.replace(cfg.serve, max_batch=2, max_seq=64)
+    sched = SlotScheduler(cfg, params, serve=serve)
+    rules = decode_rules(multi_pod=False, long_context=False)
+    specs = serve_state_pspecs(cfg, sched.state, rules)
+    k_spec = specs.cache["kv"]["k"]
+    assert k_spec == P(None, rules["batch"], "model", None, None)
+    assert specs.pos == P(rules["batch"])
+    assert specs.forced == P(rules["batch"], None)
+    assert specs.key == P(None)
+
+
+def test_rtpm_nan_safe_selection():
+    """A NaN/inf candidate can no longer hijack best-of-inits selection."""
+    from repro.cpd.rtpm import _nan_safe_argmax
+    vals = jnp.array([1.0, jnp.nan, 3.0, jnp.inf, 2.0])
+    assert int(_nan_safe_argmax(vals)) == 2
+    assert int(_nan_safe_argmax(jnp.array([jnp.nan, jnp.nan]))) == 0
