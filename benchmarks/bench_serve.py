@@ -1,10 +1,17 @@
-"""Continuous-batching serve benchmark: tok/s and prefix-cache hit rate
-over a mixed-length request stream with shared system prefixes.
+"""Continuous-batching serve benchmark: per-family tok/s, prefix-cache hit
+rate, and chunked-prefill hit latency over mixed-length request streams
+with shared system prefixes.
+
+One row per served family — transformer (dense) vs recurrent (ssm /
+hybrid) — so the slot scheduler's two state layouts are measured
+separately, plus a ``prefill_hit`` row timing a cached-prefix request
+whose uncached suffix spans multiple prefill buckets (the chunked-prefill
+path) against the equivalent cold miss.
 
 Reports steady-state decode throughput (compile excluded via a warmup
-drain), the prefix-cache hit rate / cached bytes vs budget, and asserts
-the engine's two contracts: one decode compilation for the whole stream,
-and cached KV bytes never above the configured budget.
+drain) and asserts the engine's contracts: one decode compilation for the
+whole stream (and one chunked-prefill compilation for attention
+families), and cached KV bytes never above the configured budget.
 """
 from __future__ import annotations
 
@@ -18,12 +25,12 @@ from benchmarks.common import emit
 from repro.configs.registry import reduced_config
 from repro.launch.serve import make_request_stream
 from repro.models import model as M
-from repro.serve.scheduler import SlotScheduler
+from repro.serve.scheduler import KV_FAMILIES, Request, SlotScheduler
 
 
-def run(arch: str = "gemma-2b", n_requests: int = 24, n_prefixes: int = 3,
-        prefix_len: int = 32, max_tail: int = 12, max_new: int = 8,
-        max_batch: int = 4, max_seq: int = 128) -> None:
+def _stream(arch: str, n_requests: int, n_prefixes: int, prefix_len: int,
+            max_tail: int, max_new: int, max_batch: int, max_seq: int,
+            sampled_frac: float) -> None:
     cfg = reduced_config(arch)
     k_params, _ = jax.random.split(jax.random.PRNGKey(0))
     params = M.init_params(k_params, cfg)
@@ -33,27 +40,99 @@ def run(arch: str = "gemma-2b", n_requests: int = 24, n_prefixes: int = 3,
     sched = SlotScheduler(cfg, params, serve=serve)
     rng = np.random.RandomState(0)
 
-    # warmup drain: compiles decode once + the prefill buckets
+    # recurrent families compile prefill per distinct prompt length, so
+    # the compile warmup must cover EVERY length the stream can emit —
+    # otherwise fresh compilations land inside the timed region and get
+    # reported as family tok/s.  Attention families compile prefill once
+    # (offset-traced chunks): the stream warmup below suffices.
+    if cfg.family not in KV_FAMILIES:
+        rng_w = np.random.RandomState(99)
+        sched.run([Request(rid=20_000 + t,
+                           tokens=rng_w.randint(
+                               0, cfg.vocab_size,
+                               (prefix_len + t,)).astype(np.int32),
+                           max_new=max_new)
+                   for t in range(1, max_tail + 1)])
+    # stream warmup: lets the count-min tracker see the shared prefixes
     sched.run(make_request_stream(cfg, rng, max_batch, n_prefixes,
                                   prefix_len, max_tail, max_new,
-                                  rid0=10_000))
+                                  rid0=10_000, sampled_frac=sampled_frac))
 
     reqs = make_request_stream(cfg, rng, n_requests, n_prefixes, prefix_len,
-                               max_tail, max_new)
+                               max_tail, max_new,
+                               sampled_frac=sampled_frac)
     t0 = time.time()
     done = sched.run(reqs)
     dt = time.time() - t0
     toks = sum(len(c.tokens) for c in done)
-    st = sched.prefix_cache.stats
     assert sched.decode_compilations == 1, sched.decode_compilations
-    assert st.bytes <= serve.prefix_cache_bytes, (st.bytes,
-                                                  serve.prefix_cache_bytes)
-    emit(f"serve/continuous_batch/{arch}", dt / max(toks, 1),
-         f"tok_s={toks/dt:.1f};hit_rate={st.hit_rate:.2f};"
-         f"cached_bytes={st.bytes};budget={serve.prefix_cache_bytes};"
-         f"tracker_bytes={sched.prefix_cache.tracker_bytes()};"
-         f"decode_compiles={sched.decode_compilations};"
-         f"decode_steps={sched.decode_steps}")
+    derived = (f"family={cfg.family};tok_s={toks/dt:.1f};"
+               f"decode_compiles={sched.decode_compilations};"
+               f"decode_steps={sched.decode_steps};"
+               f"prefill_compiles={sched.prefill_compilations}")
+    if cfg.family in KV_FAMILIES:
+        st = sched.prefix_cache.stats
+        assert sched.prefill_compilations == 1, sched.prefill_compilations
+        assert st.bytes <= serve.prefix_cache_bytes, (
+            st.bytes, serve.prefix_cache_bytes)
+        derived += (f";hit_rate={st.hit_rate:.2f};cached_bytes={st.bytes};"
+                    f"budget={serve.prefix_cache_bytes};"
+                    f"tracker_bytes={sched.prefix_cache.tracker_bytes()}")
+    emit(f"serve/continuous_batch/{arch}", dt / max(toks, 1), derived)
+
+
+def _hit_latency(arch: str, prefix_len: int, suffix_len: int, max_new: int,
+                 max_seq: int) -> None:
+    """Cached-prefix request latency (suffix chunk-prefilled, spanning
+    multiple buckets) vs the equivalent cold miss."""
+    cfg = reduced_config(arch)
+    k_params, _ = jax.random.split(jax.random.PRNGKey(0))
+    params = M.init_params(k_params, cfg)
+    serve = dataclasses.replace(
+        cfg.serve, max_batch=1, max_seq=max_seq, prefix_block=prefix_len,
+        admit_threshold=2)
+    sched = SlotScheduler(cfg, params, serve=serve)
+    rng = np.random.RandomState(1)
+    prefix = rng.randint(0, cfg.vocab_size, (prefix_len,)).astype(np.int32)
+
+    def req(rid):
+        tail = rng.randint(0, cfg.vocab_size, (suffix_len,)).astype(np.int32)
+        return Request(rid=rid, tokens=np.concatenate([prefix, tail]),
+                       max_new=max_new)
+
+    # warm: compile + push the shared prefix over the admission threshold
+    for i in range(3):
+        sched.run([req(i)])
+    t0 = time.time()
+    hit = sched.run([req(100)])[0]
+    t_hit = time.time() - t0
+    assert hit.prefix_hit, "prefix should be cached by now"
+    t0 = time.time()
+    cold = sched.run([Request(
+        rid=101,
+        tokens=rng.randint(0, cfg.vocab_size,
+                           (prefix_len + suffix_len,)).astype(np.int32),
+        max_new=max_new)])[0]
+    t_cold = time.time() - t0
+    assert not cold.prefix_hit
+    n_buckets = -(-suffix_len // cfg.serve.prefill_bucket)
+    emit(f"serve/prefill_hit/{arch}", t_hit,
+         f"cold_miss_s={t_cold:.4f};speedup={t_cold/max(t_hit,1e-9):.2f}x;"
+         f"suffix_tokens={suffix_len};suffix_buckets={n_buckets};"
+         f"decode_compiles={sched.decode_compilations}")
+
+
+def run(archs=("gemma-2b", "xlstm-1.3b", "zamba2-2.7b"),
+        n_requests: int = 24, n_prefixes: int = 3, prefix_len: int = 32,
+        max_tail: int = 12, max_new: int = 8, max_batch: int = 4,
+        max_seq: int = 128, sampled_frac: float = 0.25,
+        hit_suffix: int = 48) -> None:
+    for arch in archs:
+        _stream(arch, n_requests, n_prefixes, prefix_len, max_tail,
+                max_new, max_batch, max_seq, sampled_frac)
+    # chunked-prefill hit latency: suffix spans multiple prefill buckets
+    _hit_latency("gemma-2b", prefix_len=prefix_len, suffix_len=hit_suffix,
+                 max_new=max_new, max_seq=max_seq)
 
 
 if __name__ == "__main__":

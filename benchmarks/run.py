@@ -1,19 +1,53 @@
 """Run every paper-table benchmark; print ``name,us_per_call,derived`` CSV.
 
-  PYTHONPATH=src python -m benchmarks.run [--fast]
+  PYTHONPATH=src python -m benchmarks.run [--fast] [--only a,b] [--json f]
+
+``--json`` additionally writes the collected rows as a JSON list of
+{name, us_per_call, derived} objects — the CI bench-smoke job uploads it
+as a per-PR artifact so the perf trajectory is recorded.  ``--only``
+restricts the pass to a comma-separated subset of benchmark modules
+(e.g. ``--only serve,opt_state``).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
+
+
+def _write_json(path: str) -> None:
+    from benchmarks.common import ROWS
+    rows = []
+    for r in ROWS:
+        name, us, derived = r.split(",", 2)
+        rows.append({"name": name, "us_per_call": float(us),
+                     "derived": derived})
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"# wrote {len(rows)} rows to {path}", file=sys.stderr)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="trim grids for a quick pass")
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset of benches "
+                         "(rtpm,als,trl,kron,contract,grad_compress,"
+                         "opt_state,serve)")
+    ap.add_argument("--json", default="",
+                    help="also write rows as JSON to this path")
     args, _ = ap.parse_known_args()
+
+    known = {"rtpm", "als", "trl", "kron", "contract", "grad_compress",
+             "opt_state", "serve"}
+    only = {s.strip() for s in args.only.split(",") if s.strip()}
+    unknown = only - known
+    if unknown:   # a typo must not silently produce an empty artifact
+        raise SystemExit(f"--only: unknown benches {sorted(unknown)}; "
+                         f"known: {sorted(known)}")
+    want = lambda n: not only or n in only
 
     print("name,us_per_call,derived")
     t0 = time.time()
@@ -23,24 +57,47 @@ def main() -> None:
                             bench_serve, bench_trl)
 
     if args.fast:
-        bench_rtpm.run(I=40, Js=(400,), table2=False)
-        bench_als.run(I=40, Js=(800,), D=4, iters=8)
-        bench_trl.run(crs=(20, 100), n_train=512, n_test=256)
-        bench_kron.run(crs=(4, 16), D=8)
-        bench_contract.run(crs=(4, 16), D=8)
-        bench_grad_compress.run(dims=1 << 18, ratios=(16,))
-        bench_opt_state.run(dims=(1 << 17, 1 << 13), ratios=(4,), steps=10)
-        bench_serve.run(n_requests=8, max_new=4, max_batch=2)
+        if want("rtpm"):
+            bench_rtpm.run(I=40, Js=(400,), table2=False)
+        if want("als"):
+            bench_als.run(I=40, Js=(800,), D=4, iters=8)
+        if want("trl"):
+            bench_trl.run(crs=(20, 100), n_train=512, n_test=256)
+        if want("kron"):
+            bench_kron.run(crs=(4, 16), D=8)
+        if want("contract"):
+            bench_contract.run(crs=(4, 16), D=8)
+        if want("grad_compress"):
+            bench_grad_compress.run(dims=1 << 18, ratios=(16,))
+        if want("opt_state"):
+            bench_opt_state.run(dims=(1 << 17, 1 << 13), ratios=(4,),
+                                steps=10)
+        if want("serve"):
+            # hit_suffix must exceed prefill_bucket (32) so the
+            # prefill_hit row really times the multi-bucket chunked path
+            bench_serve.run(archs=("gemma-2b", "xlstm-1.3b"),
+                            n_requests=8, max_new=4, max_batch=2,
+                            hit_suffix=40)
     else:
-        bench_rtpm.run()
-        bench_als.run()
-        bench_trl.run()
-        bench_kron.run()
-        bench_contract.run()
-        bench_grad_compress.run()
-        bench_opt_state.run()
-        bench_serve.run()
+        if want("rtpm"):
+            bench_rtpm.run()
+        if want("als"):
+            bench_als.run()
+        if want("trl"):
+            bench_trl.run()
+        if want("kron"):
+            bench_kron.run()
+        if want("contract"):
+            bench_contract.run()
+        if want("grad_compress"):
+            bench_grad_compress.run()
+        if want("opt_state"):
+            bench_opt_state.run()
+        if want("serve"):
+            bench_serve.run()
 
+    if args.json:
+        _write_json(args.json)
     print(f"# total benchmark wall time: {time.time()-t0:.1f}s",
           file=sys.stderr)
 

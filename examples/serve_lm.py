@@ -49,29 +49,36 @@ def main():
         print(f"  seq {i}:", res.tokens[i, :8].tolist())
 
     # -- Part 2: request-stream API --------------------------------------
-    if cfg.family not in KV_FAMILIES:
-        print(f"[stream] {cfg.family} family uses the synchronized "
-              "fallback; request-stream demo skipped")
-        return
+    # every family rides the slot scheduler now: attention families get
+    # chunked prefill + the prefix cache, ssm/hybrid get slot-inserted
+    # recurrent state; sampling params are per-request.
     serve = dataclasses.replace(cfg.serve, max_batch=2, max_seq=128,
                                 admit_threshold=2)
     sched = SlotScheduler(cfg, params, serve=serve)
     rng = np.random.RandomState(0)
     system = rng.randint(0, cfg.vocab_size, (32,)).astype(np.int32)
     for rid in range(6):
-        # mixed lengths, all sharing the 32-token "system prompt"
+        # mixed lengths, all sharing the 32-token "system prompt"; odd
+        # rids ask for seeded top-k sampling, even rids decode greedily —
+        # both share the one compiled decode chunk.
         tail = rng.randint(0, cfg.vocab_size,
                            size=rng.randint(1, 9)).astype(np.int32)
         sched.submit(Request(rid=rid, tokens=np.concatenate([system, tail]),
-                             max_new=6))
+                             max_new=6,
+                             temperature=0.8 if rid % 2 else 0.0,
+                             top_k=8 if rid % 2 else 0,
+                             seed=rid if rid % 2 else None))
     while sched.pending:
         done = sched.step()          # admit -> one decode chunk -> retire
         for c in done:
             print(f"[stream] rid {c.rid} (prompt {c.prompt_len}, "
                   f"prefix_hit={c.prefix_hit}): {c.tokens.tolist()}")
-    st = sched.prefix_cache.stats
     print(f"[stream] decode compilations: {sched.decode_compilations}, "
-          f"hit rate {st.hit_rate:.2f}, cached bytes {st.bytes}")
+          f"prefill compilations: {sched.prefill_compilations}")
+    if cfg.family in KV_FAMILIES:
+        st = sched.prefix_cache.stats
+        print(f"[stream] hit rate {st.hit_rate:.2f}, "
+              f"cached bytes {st.bytes}")
 
 
 if __name__ == "__main__":

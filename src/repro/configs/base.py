@@ -53,16 +53,22 @@ class SketchConfig:
 class ServeConfig:
     """Continuous-batching engine knobs (repro.serve.scheduler).
 
-    ``max_batch``/``max_seq``: the fixed slot-cache geometry — the KV cache
-    is preallocated at (L, max_batch, max_seq, K, hd) and the decode step
-    compiles exactly once for the engine's lifetime.
+    ``max_batch``/``max_seq``: the fixed slot-state geometry — attention
+    families preallocate a (L, max_batch, max_seq, K, hd) KV cache,
+    recurrent families their stacked per-layer states, and the decode step
+    compiles exactly once for the engine's lifetime.  Sampling params
+    (temperature / top-k / seed) are per-request, carried as per-slot
+    engine state — they don't specialize the compiled chunk.
     ``decode_chunk``: decode steps per scheduler intervention (the jitted
     lax.scan length); admission/retirement happens between chunks.
-    ``prefill_bucket``: prompt lengths are padded up to a multiple of this
-    before prefill so the number of prefill compilations is bounded by the
-    number of buckets, not distinct prompt lengths (padded junk tokens are
-    causally masked and never attended; for the moe family bucketing can
-    perturb expert-capacity dispatch — set 1 for exact-length prefill).
+    ``prefill_bucket``: the chunked-prefill chunk size for attention
+    families — prompts (and cached-prefix suffixes of any length) are fed
+    through one offset-traced compiled chunk of this many tokens, so
+    prefill compiles once regardless of prompt lengths.  The tail chunk is
+    zero-padded; pad rows are causally dead, but for the moe family they
+    still compete in expert-capacity dispatch — set 1 for exact-length
+    chunks.  Recurrent families ignore it (exact-length prefill: trailing
+    pad tokens would corrupt a recurrence).
     ``admit_threshold``: a prompt prefix's KV block is admitted to the
     bounded prefix cache only once its count-min estimated frequency
     reaches this value (TinyLFU-style sketch-gated admission; count-min's

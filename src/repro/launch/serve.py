@@ -6,7 +6,11 @@ continuous-batching engine, with prefix-cache hit stats.
 
 The stream mimics production traffic: a handful of shared "system prompt"
 prefixes with random per-request tails of mixed lengths, so the count-min
-admission filter has real heavy hitters to find.  Runs on the reduced
+admission filter has real heavy hitters to find.  Every family rides the
+slot scheduler — attention families through chunked prefill + the prefix
+cache, recurrent families (ssm/hybrid) through slot-inserted state.  Part
+of the stream can be sampled (``--sampled-frac``) to exercise mixed
+greedy/sampled decoding in the one compiled chunk.  Runs on the reduced
 config by default; pass ``--full`` for the full architecture.
 """
 from __future__ import annotations
@@ -25,11 +29,14 @@ from repro.serve.scheduler import KV_FAMILIES, Request, SlotScheduler
 
 def make_request_stream(cfg, rng: np.random.RandomState, n_requests: int,
                         n_prefixes: int, prefix_len: int, max_tail: int,
-                        max_new: int, rid0: int = 0):
+                        max_new: int, rid0: int = 0,
+                        sampled_frac: float = 0.0, temperature: float = 0.8,
+                        top_k: int = 8):
     """Mixed-length prompts: each request samples one of ``n_prefixes``
-    shared system prefixes and appends a random-length random tail.
-    The canonical heavy-tailed workload generator — the CLI driver and
-    benchmarks/bench_serve.py both use it."""
+    shared system prefixes and appends a random-length random tail; a
+    ``sampled_frac`` fraction of requests asks for seeded top-k sampling
+    instead of greedy decoding.  The canonical heavy-tailed workload
+    generator — the CLI driver and benchmarks/bench_serve.py both use it."""
     prefixes = rng.randint(0, cfg.vocab_size,
                            (n_prefixes, prefix_len)).astype(np.int32)
     reqs = []
@@ -37,8 +44,12 @@ def make_request_stream(cfg, rng: np.random.RandomState, n_requests: int,
         p = prefixes[rng.randint(n_prefixes)]
         tail = rng.randint(0, cfg.vocab_size,
                            size=rng.randint(1, max_tail + 1)).astype(np.int32)
-        reqs.append(Request(rid=rid0 + i, tokens=np.concatenate([p, tail]),
-                            max_new=max_new))
+        sampled = rng.rand() < sampled_frac
+        reqs.append(Request(
+            rid=rid0 + i, tokens=np.concatenate([p, tail]), max_new=max_new,
+            temperature=temperature if sampled else 0.0,
+            top_k=top_k if sampled else 0,
+            seed=int(rng.randint(1 << 30)) if sampled else None))
     return reqs
 
 
@@ -54,16 +65,18 @@ def main():
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--admit-threshold", type=int, default=2)
+    ap.add_argument("--sampled-frac", type=float, default=0.25,
+                    help="fraction of requests decoded with top-k sampling")
+    ap.add_argument("--temperature", type=float, default=0.8,
+                    help="temperature for the sampled fraction")
+    ap.add_argument("--top-k", type=int, default=8,
+                    help="top-k cutoff for the sampled fraction")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--full", action="store_true",
                     help="run the full architecture (default: reduced)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch) if args.full else reduced_config(args.arch)
-    if cfg.family not in KV_FAMILIES:
-        raise SystemExit(
-            f"{args.arch} ({cfg.family}) has no slot KV cache; use "
-            f"examples/serve_lm.py's ServeEngine fallback instead")
     # independent keys: reusing the params-init key for prompt generation
     # correlates weights with data (and made every run's prompts identical
     # to its init) — split once, use each stream exactly once.
@@ -75,22 +88,31 @@ def main():
     sched = SlotScheduler(cfg, params, serve=serve)
     reqs = make_request_stream(cfg, np.random.RandomState(args.seed + 1),
                                args.requests, args.prefixes,
-                               args.prefix_len, args.max_tail, args.max_new)
+                               args.prefix_len, args.max_tail, args.max_new,
+                               sampled_frac=args.sampled_frac,
+                               temperature=args.temperature,
+                               top_k=args.top_k)
 
     t0 = time.time()
     done = sched.run(reqs)
     dt = time.time() - t0
     toks = sum(len(c.tokens) for c in done)
-    st = sched.prefix_cache.stats
-    print(f"served {len(done)} requests / {toks} tokens in {dt:.2f}s "
-          f"({toks/dt:.1f} tok/s incl. compile)")
+    n_sampled = sum(1 for r in reqs if (r.temperature or 0) > 0)
+    print(f"served {len(done)} requests ({n_sampled} sampled) / {toks} "
+          f"tokens in {dt:.2f}s ({toks/dt:.1f} tok/s incl. compile)")
     print(f"decode compilations: {sched.decode_compilations} "
-          f"(steps: {sched.decode_steps})")
-    print(f"prefix cache: hit_rate={st.hit_rate:.2f} "
-          f"({st.hits}/{st.lookups}), admitted={st.admitted}, "
-          f"evicted={st.evicted}, cached_bytes={st.bytes} "
-          f"(budget {serve.prefix_cache_bytes}), "
-          f"tracker_bytes={sched.prefix_cache.tracker_bytes()}")
+          f"(steps: {sched.decode_steps}), "
+          f"prefill compilations: {sched.prefill_compilations}")
+    if cfg.family in KV_FAMILIES:
+        st = sched.prefix_cache.stats
+        print(f"prefix cache: hit_rate={st.hit_rate:.2f} "
+              f"({st.hits}/{st.lookups}), admitted={st.admitted}, "
+              f"evicted={st.evicted}, cached_bytes={st.bytes} "
+              f"(budget {serve.prefix_cache_bytes}), "
+              f"tracker_bytes={sched.prefix_cache.tracker_bytes()}")
+    else:
+        print(f"recurrent family ({cfg.family}): slot-scheduled state, "
+              f"prefix cache n/a")
     print("first completions:",
           [(c.rid, c.tokens[:6].tolist()) for c in done[:2]])
 

@@ -277,13 +277,16 @@ def serve_state_pspecs(cfg: ModelConfig, state: Any,
                        rules: Dict[str, MeshAxes]) -> Any:
     """PartitionSpecs for a serve.scheduler.DecodeState pytree.
 
-    The slot cache reuses the decode cache placement (slots are the batch
-    dim: (L, B_slots, S_max, K, hd) with kv_seq split-KV over "model");
-    per-slot bookkeeping vectors (cur/pos/remaining/forced*) ride the same
-    batch axis so scheduler masks stay local to the slot's shard, and the
-    PRNG key replicates.  Built for the launch drivers: on a mesh, jit the
-    decode chunk with these as in/out shardings (donated state keeps the
-    placement stable across chunks).
+    The slot state reuses the decode cache placement — for attention
+    families slots are the batch dim of the KV cache ((L, B_slots, S_max,
+    K, hd) with kv_seq split-KV over "model"); for recurrent families the
+    stacked per-layer states carry the same (X, B_slots, ...) layout and
+    cache_pspecs already places every leaf kind.  Per-slot bookkeeping
+    (cur/pos/remaining) and per-slot sampling state (temp/top_k/keys) ride
+    the same batch axis so scheduler masks and the per-slot PRNG splits
+    stay local to the slot's shard.  Built for the launch drivers: on a
+    mesh, jit the decode chunk with these as in/out shardings (donated
+    state keeps the placement stable across chunks).
     """
     from repro.serve.scheduler import DecodeState
 
@@ -295,8 +298,7 @@ def serve_state_pspecs(cfg: ModelConfig, state: Any,
         cur=slot(state.cur),
         pos=slot(state.pos),
         remaining=slot(state.remaining),
-        forced=slot(state.forced),
-        forced_n=slot(state.forced_n),
-        forced_i=slot(state.forced_i),
-        key=P(None),
+        temp=slot(state.temp),
+        top_k=slot(state.top_k),
+        keys=slot(state.keys),
     )

@@ -178,6 +178,24 @@ def _flash_attention(q, k, v, kc):
     return out.astype(q.dtype)
 
 
+def _project_qkv_rope(p: dict, x: jax.Array, cfg: ModelConfig,
+                      positions: jax.Array):
+    """Shared decode/chunk-prefill QKV block: project (+bias), split
+    heads, rope q and k at ``positions`` ((S,) or (B, S)).  One home for
+    this math keeps the chunked-prefill path bit-identical to decode."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    H, K = cfg.num_heads, cfg.num_kv_heads
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    kn = jnp.einsum("bsd,dh->bsh", x, p["wk"])
+    vn = jnp.einsum("bsd,dh->bsh", x, p["wv"])
+    if cfg.qkv_bias:
+        q, kn, vn = q + p["bq"], kn + p["bk"], vn + p["bv"]
+    q = rope(q.reshape(B, S, H, hd), positions, cfg.rope_theta)
+    kn = rope(kn.reshape(B, S, K, hd), positions, cfg.rope_theta)
+    return q, kn, vn.reshape(B, S, K, hd)
+
+
 def decode_attention(p: dict, x: jax.Array, cfg: ModelConfig,
                      cache: dict, index: jax.Array) -> Tuple[jax.Array, dict]:
     """Single-token decode against a KV cache.
@@ -194,18 +212,9 @@ def decode_attention(p: dict, x: jax.Array, cfg: ModelConfig,
     H, K = cfg.num_heads, cfg.num_kv_heads
     R = H // K
     per_slot = jnp.ndim(index) == 1
-    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
-    kn = jnp.einsum("bsd,dh->bsh", x, p["wk"])
-    vn = jnp.einsum("bsd,dh->bsh", x, p["wv"])
-    if cfg.qkv_bias:
-        q, kn, vn = q + p["bq"], kn + p["bk"], vn + p["bv"]
-    q = q.reshape(B, 1, H, hd)
-    kn = kn.reshape(B, 1, K, hd)
-    vn = vn.reshape(B, 1, K, hd)
     pos = (index[:, None].astype(jnp.int32) if per_slot
            else jnp.full((1,), index, jnp.int32))
-    q = rope(q, pos, cfg.rope_theta)
-    kn = rope(kn, pos, cfg.rope_theta)
+    q, kn, vn = _project_qkv_rope(p, x, cfg, pos)
     if per_slot:
         slots = jnp.arange(B, dtype=jnp.int32)
         k = cache["k"].at[slots, index].set(kn[:, 0].astype(cache["k"].dtype))
@@ -226,6 +235,46 @@ def decode_attention(p: dict, x: jax.Array, cfg: ModelConfig,
         mask = (jnp.arange(S) <= index)[None, :]         # (1,S) -> broadcast
     o = _gqa_scores_softmax_out(qg, k, v, mask, 1.0 / math.sqrt(hd))
     o = o.reshape(B, 1, H * hd)
+    out = jnp.einsum("bsh,hd->bsd", o, p["wo"])
+    return out, {"k": k, "v": v}
+
+
+def chunk_attention(p: dict, x: jax.Array, cfg: ModelConfig,
+                    cache: dict, slot: jax.Array, start: jax.Array
+                    ) -> Tuple[jax.Array, dict]:
+    """Multi-token chunk against the slot KV cache (chunked prefill).
+
+    x: (1, C, d) — one prompt chunk for one slot.  Writes KV rows
+    [start, start + C) of slot ``slot`` into cache {"k": (B, S_max, K, hd),
+    "v": ...}, then attends every chunk query causally against the slot's
+    full cache row, so a chunk at offset ``start`` sees both earlier chunks
+    and any prefix-cache block already inserted below it.  ``slot`` and
+    ``start`` are traced scalars — one compilation serves every offset.
+    Returns (out (1, C, d), updated cache).
+    """
+    _, C, _ = x.shape
+    hd = cfg.resolved_head_dim
+    H, K = cfg.num_heads, cfg.num_kv_heads
+    R = H // K
+    positions = start + jnp.arange(C, dtype=jnp.int32)
+    q, kn, vn = _project_qkv_rope(p, x, cfg, positions)
+    k = jax.lax.dynamic_update_slice(
+        cache["k"], kn.astype(cache["k"].dtype), (slot, start, 0, 0))
+    v = jax.lax.dynamic_update_slice(
+        cache["v"], vn.astype(cache["v"].dtype), (slot, start, 0, 0))
+    # same placement pin decode_attention applies: the split-KV layout
+    # from serve_state_pspecs must survive the chunked-prefill update
+    k = shard(k, "batch", "kv_seq", "kv_heads", None)
+    v = shard(v, "batch", "kv_seq", "kv_heads", None)
+    ks = jax.lax.dynamic_slice_in_dim(k, slot, 1, axis=0)   # (1, S_max, ...)
+    vs = jax.lax.dynamic_slice_in_dim(v, slot, 1, axis=0)
+    S = ks.shape[1]
+    # causal over absolute positions: key row j visible to chunk query i
+    # iff j <= start + i (earlier chunks / cached prefix included)
+    mask = (jnp.arange(S)[None, :] <= positions[:, None])[None, None, None]
+    qg = q.reshape(1, C, K, R, hd)
+    o = _gqa_scores_softmax_out(qg, ks, vs, mask, 1.0 / math.sqrt(hd))
+    o = o.reshape(1, C, H * hd)
     out = jnp.einsum("bsh,hd->bsd", o, p["wo"])
     return out, {"k": k, "v": v}
 

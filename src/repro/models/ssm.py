@@ -43,6 +43,18 @@ def _conv_step(buf: jax.Array, x_t: jax.Array, w: jax.Array,
     return window[:, 1:], y[:, None, :]
 
 
+def _conv_stash(x: jax.Array, width: int) -> jax.Array:
+    """Last ``width`` inputs for the decode conv buffer, LEFT-padded with
+    zeros when the sequence is shorter — the decode window is ordered
+    oldest-to-newest, so a short prompt's implicit zero history must sit at
+    the front, not trail the real inputs."""
+    stash = x[:, -width:]
+    S = stash.shape[1]
+    if S < width:
+        stash = jnp.pad(stash, ((0, 0), (width - S, 0), (0, 0)))
+    return stash
+
+
 # ===========================================================================
 # Mamba-2 (SSD)
 # ===========================================================================
@@ -192,8 +204,8 @@ def mamba2_block(p: dict, x: jax.Array, cfg: ModelConfig,
     new_state = None
     if state is None:
         if want_state:  # stash conv inputs for the decode conv buffer
-            cbx = xr[:, -(s.conv_width - 1):]
-            cbc = BC[:, -(s.conv_width - 1):]
+            cbx = _conv_stash(xr, s.conv_width - 1)
+            cbc = _conv_stash(BC, s.conv_width - 1)
         xr = jax.nn.silu(_causal_conv(xr, p["conv_wx"], p["conv_bx"]))
         BC = jax.nn.silu(_causal_conv(BC, p["conv_wBC"], p["conv_bBC"]))
     else:
@@ -309,7 +321,7 @@ def mlstm_block(p: dict, x: jax.Array, cfg: ModelConfig,
             C_fin = jnp.einsum("bsh,bshp,bshq->bhpq", w, kf, vf)
             n_fin = jnp.einsum("bsh,bshp->bhp", w, kf)
             new_state = {"C": C_fin, "n": n_fin, "m": m_fin,
-                         "conv": xb[:, -3:].astype(xb.dtype)}
+                         "conv": _conv_stash(xb, 3).astype(xb.dtype)}
     else:
         C, n, m = state["C"], state["n"], state["m"]           # f32
         i_t, lf_t = i_pre[:, 0], logf[:, 0]                    # (B,H)

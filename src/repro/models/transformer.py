@@ -101,12 +101,16 @@ def _init_blocks(key: jax.Array, cfg: ModelConfig) -> Params:
 # ---------------------------------------------------------------------------
 
 
-def _dense_block(p_l, x, cfg: ModelConfig, positions, cache_l, index, mode):
+def _dense_block(p_l, x, cfg: ModelConfig, positions, cache_l, index, mode,
+                 slot=None):
     """One attention+FFN (or attention+MoE) block. Returns (x, aux, cache)."""
     h = ly.rms_norm(x, p_l["norm1"], cfg.norm_eps)
     new_cache = None
     if mode == "decode":
         a, new_cache = ly.decode_attention(p_l["attn"], h, cfg, cache_l, index)
+    elif mode == "chunk":
+        a, new_cache = ly.chunk_attention(p_l["attn"], h, cfg, cache_l,
+                                          slot, index)
     else:
         a = ly.causal_attention(p_l["attn"], h, cfg, positions)
         if mode == "prefill":
@@ -132,18 +136,28 @@ def _dense_block(p_l, x, cfg: ModelConfig, positions, cache_l, index, mode):
 
 def forward(params: Params, x: jax.Array, cfg: ModelConfig,
             mode: str = "train", cache: Optional[dict] = None,
-            index: Optional[jax.Array] = None
+            index: Optional[jax.Array] = None,
+            slot: Optional[jax.Array] = None
             ) -> Tuple[jax.Array, jax.Array, Optional[dict]]:
-    """x: embedded inputs (B, S, d).  Returns (hidden, aux_loss, cache)."""
+    """x: embedded inputs (B, S, d).  Returns (hidden, aux_loss, cache).
+
+    Modes: "train" / "prefill" (full-sequence), "decode" (single token per
+    slot against the cache), "chunk" (multi-token prompt chunk for slot
+    ``slot`` written into the cache at offset ``index`` — the chunked
+    prefill building block; attention families only).
+    """
     B, S, d = x.shape
-    if mode != "decode":
+    if mode not in ("decode", "chunk"):
         x = shard(x, "batch", "residual", None)
     positions = (jnp.arange(S) if index is None
                  else jnp.arange(S) + index)
     fam = cfg.family
     if fam in ("dense", "audio", "vlm", "moe"):
         y, aux, new_cache = _forward_attn_stack(params, x, cfg, positions,
-                                                mode, cache, index)
+                                                mode, cache, index, slot)
+    elif mode == "chunk":
+        raise ValueError(f"chunked prefill needs a kv-cache family, "
+                         f"got {fam!r}")
     elif fam == "ssm":
         y, aux, new_cache = _forward_xlstm(params, x, cfg, mode, cache)
     elif fam == "hybrid":
@@ -155,14 +169,16 @@ def forward(params: Params, x: jax.Array, cfg: ModelConfig,
     return y, aux, new_cache
 
 
-def _forward_attn_stack(params, x, cfg, positions, mode, cache, index):
+def _forward_attn_stack(params, x, cfg, positions, mode, cache, index,
+                        slot=None):
     blocks = params["blocks"]
 
-    if mode == "decode":
+    if mode in ("decode", "chunk"):
         def body(carry, xs):
             h, aux = carry
             p_l, c_l = xs
-            h, a, nc = _dense_block(p_l, h, cfg, positions, c_l, index, mode)
+            h, a, nc = _dense_block(p_l, h, cfg, positions, c_l, index, mode,
+                                    slot)
             return (h, aux + a), nc
 
         (y, aux), kv = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
@@ -375,3 +391,24 @@ def prefill(params: Params, batch: dict, cfg: ModelConfig
     y, _, cache = forward(params, x, cfg, mode="prefill")
     logits = ly.logits_fn(params, y[:, -1:], cfg)[:, 0]
     return logits, cache
+
+
+def prefill_chunk(params: Params, cache: dict, tokens: jax.Array,
+                  slot: jax.Array, start: jax.Array, cfg: ModelConfig
+                  ) -> dict:
+    """Chunked prefill step: write KV rows [start, start + C) of slot
+    ``slot`` into the slot cache, attending the chunk against everything
+    already cached below it (earlier chunks, prefix-cache blocks).
+
+    tokens: (1, C) int32 — one bucket-sized chunk of one prompt (the tail
+    chunk is zero-padded; junk rows past the prompt sit at positions no
+    query attends before decode rewrites them).  No logits are produced:
+    the scheduler resumes decode at the last prompt position, which
+    recomputes that row's logits in-graph.  ``slot``/``start`` are traced,
+    so one compilation serves every slot and offset — the engine's
+    prefill compile count is 1 regardless of prompt lengths.
+    """
+    x = ly.embed_tokens(params["embed"], tokens)
+    _, _, new_cache = forward(params, x, cfg, mode="chunk", cache=cache,
+                              index=start, slot=slot)
+    return new_cache

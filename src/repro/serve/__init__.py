@@ -1,21 +1,25 @@
-"""Serving subsystem: continuous batching over a fixed slot cache.
+"""Serving subsystem: continuous batching over fixed per-slot state.
 
 Layering:
   prefix_cache.py — count-min (CSVec) gated prefix-KV admission under a
                     hard byte budget
   scheduler.py    — slot scheduler + the single compiled lax.scan decode
-                    chunk with per-slot position/active/forced masks
-  engine.py       — ServeEngine facade (batched generate API; synchronized
-                    fallback for recurrent-state families)
+                    chunk with per-slot position/active/sampling state;
+                    chunked prefill for attention families, slot-inserted
+                    recurrent state for ssm/hybrid
+  engine.py       — ServeEngine facade (batched generate API with
+                    per-request temperature/top-k)
 """
-from repro.serve.engine import GenerationResult, ServeEngine, seed_cache
+from repro.serve.engine import GenerationResult, ServeEngine
 from repro.serve.prefix_cache import (PrefixCacheStats, SketchPrefixCache,
                                       prefix_key)
-from repro.serve.scheduler import (KV_FAMILIES, Completion, DecodeState,
-                                   Request, SlotScheduler)
+from repro.serve.scheduler import (KV_FAMILIES, RECURRENT_FAMILIES,
+                                   Completion, DecodeState, Request,
+                                   SlotScheduler)
 
 __all__ = [
-    "GenerationResult", "ServeEngine", "seed_cache",
+    "GenerationResult", "ServeEngine",
     "PrefixCacheStats", "SketchPrefixCache", "prefix_key",
-    "KV_FAMILIES", "Completion", "DecodeState", "Request", "SlotScheduler",
+    "KV_FAMILIES", "RECURRENT_FAMILIES", "Completion", "DecodeState",
+    "Request", "SlotScheduler",
 ]

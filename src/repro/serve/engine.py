@@ -1,34 +1,36 @@
 """Serving engine facade over the continuous-batching slot scheduler.
 
 ``ServeEngine.generate`` keeps the classic batched-generation API (a (B, S)
-prompt matrix in, a (B, max_new) token matrix out) but is now implemented on
-top of ``serve.scheduler.SlotScheduler``: requests are admitted into a
-fixed-geometry slot cache, decode is ONE compiled ``lax.scan`` chunk for the
-engine's lifetime, and repeated prompts are served through the count-min
-gated prefix cache.  The old per-request cache-regrow hack
-(``_grow_cache``) is gone — the cache is preallocated at
-(L, max_batch, max_seq, K, hd) and never reshaped.
+prompt matrix in, a (B, max_new) token matrix out) but is implemented on
+top of ``serve.scheduler.SlotScheduler`` for EVERY family: requests are
+admitted into fixed-geometry slot state (a KV cache for attention
+families, stacked recurrent state for ssm / hybrid), decode is ONE
+compiled ``lax.scan`` chunk for the engine's lifetime, attention-family
+prompts are prefilled in bucket-sized chunks straight into the slot cache,
+and repeated prompts are served through the count-min gated prefix cache.
+The old synchronized recurrent fallback (prefill-once + whole-batch
+lockstep decode) is gone — ssm / hybrid requests ride the same scheduler,
+with their per-layer recurrent states slot-inserted at admission.
 
-Recurrent-state families (ssm / hybrid) have no per-position KV rows to
-slot-schedule, so they use a synchronized decode loop: prefill once, seed a
-full-size preallocated cache (``seed_cache`` — equal-shape state leaves are
-taken wholesale, seq-extent leaves are inserted at position 0), then step
-the whole batch at a shared scalar position.
+Sampling is per-request: ``temperature`` / ``top_k`` may be scalars (one
+setting for the whole batch) or length-B sequences, and they become
+per-slot engine state — mixed greedy / sampled streams share the single
+compiled decode chunk.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from dataclasses import dataclass
-from typing import Optional
+from typing import Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models import transformer as tf
-from repro.serve.scheduler import KV_FAMILIES, Request, SlotScheduler
+from repro.serve.scheduler import Request, SlotScheduler
+
+Per = Union[float, int, Sequence, jax.Array, np.ndarray]
 
 
 @dataclass
@@ -37,18 +39,13 @@ class GenerationResult:
     prompt_len: int
 
 
-def seed_cache(full, pre):
-    """Copy a prefill cache into a preallocated max-length cache: leaves
-    with matching shapes (recurrent states) are taken from the prefill
-    wholesale; seq-extent leaves (e.g. hybrid shared_kv (G, B, S, K, hd))
-    are written at offset 0, with the tail left as zeros — those rows are
-    always rewritten by decode before any query can attend to them."""
-    def one(f, p):
-        if f.shape == p.shape:
-            return p.astype(f.dtype)
-        return jax.lax.dynamic_update_slice(
-            f, p.astype(f.dtype), (0,) * f.ndim)
-    return jax.tree.map(one, full, pre)
+def _per_request(val: Per, B: int, name: str) -> np.ndarray:
+    """Broadcast a scalar or validate a length-B per-request vector."""
+    arr = np.asarray(val)
+    if arr.ndim == 0:
+        return np.full((B,), arr.item())
+    assert arr.shape == (B,), f"{name} must be scalar or ({B},), got {arr.shape}"
+    return arr
 
 
 class ServeEngine:
@@ -58,93 +55,59 @@ class ServeEngine:
         self.params = params
         self.max_seq = max_seq
         self.max_batch = max_batch
-        self._schedulers = {}        # (B, temperature) -> SlotScheduler
+        self._schedulers = {}        # max_batch -> SlotScheduler
         self._rid = 0
-        if cfg.family not in KV_FAMILIES:
-            self._decode = jax.jit(
-                functools.partial(tf.decode_step, cfg=cfg),
-                donate_argnums=(1,))
-            self._prefill = jax.jit(functools.partial(tf.prefill, cfg=cfg))
-            self._seed_cache = jax.jit(seed_cache, donate_argnums=(0,))
 
     # ------------------------------------------------------------------
 
-    def _scheduler(self, batch: int, temperature: float) -> SlotScheduler:
-        """One scheduler per (max_batch, temperature): the decode chunk is
-        specialized on both, and reusing it across generate() calls is what
-        keeps the compile count at one (and lets the prefix cache warm up
-        across calls).  If ``self.params`` has been swapped (e.g. a
-        checkpoint was loaded), every cached scheduler is dropped — its
-        prefix cache holds KV blocks computed from the old weights, so
-        serving them would silently mix models."""
+    def _scheduler(self, batch: int) -> SlotScheduler:
+        """One scheduler per slot count: the decode chunk is specialized
+        on the slot geometry only (sampling params are per-slot state), so
+        reusing it across generate() calls keeps the compile count at one
+        and lets the prefix cache warm up across calls.  If ``self.params``
+        has been swapped (e.g. a checkpoint was loaded), every cached
+        scheduler is dropped — its prefix cache holds KV blocks computed
+        from the old weights, so serving them would silently mix models."""
         if self._schedulers and next(
                 iter(self._schedulers.values())).params is not self.params:
             self._schedulers.clear()
         kb = self.max_batch or batch
-        sk = (kb, float(temperature))
-        if sk not in self._schedulers:
+        if kb not in self._schedulers:
             serve = dataclasses.replace(
                 self.cfg.serve, max_batch=kb, max_seq=self.max_seq)
-            self._schedulers[sk] = SlotScheduler(
-                self.cfg, self.params, serve=serve, temperature=temperature)
-        return self._schedulers[sk]
+            self._schedulers[kb] = SlotScheduler(
+                self.cfg, self.params, serve=serve)
+        return self._schedulers[kb]
 
     def generate(self, tokens: jax.Array, max_new: int = 32,
-                 temperature: float = 0.0,
+                 temperature: Per = 0.0, top_k: Per = 0,
                  key: Optional[jax.Array] = None) -> GenerationResult:
-        """tokens: (B, S) prompt ids.  Greedy when temperature == 0.
-        When sampling (temperature > 0) and no key is given, a PRNGKey
-        seeded from cfg.serve.seed is used — sampling without a key is a
-        valid request, not a crash."""
+        """tokens: (B, S) prompt ids.  ``temperature`` / ``top_k`` may be
+        scalars or per-request length-B vectors; a request is greedy when
+        its temperature is 0.  When sampling and no key is given, per-slot
+        keys derive from cfg.serve.seed and the request id — sampling
+        without a key is a valid request, not a crash."""
         B, S = tokens.shape
         assert S + max_new <= self.max_seq
-        if self.cfg.family in KV_FAMILIES:
-            return self._generate_slots(tokens, max_new, temperature, key)
-        return self._generate_sync(tokens, max_new, temperature, key)
-
-    # -- continuous-batching path (attention families) -------------------
-
-    def _generate_slots(self, tokens, max_new, temperature, key):
-        B, S = tokens.shape
-        sched = self._scheduler(B, temperature)
-        if key is not None:
-            sched.reseed(key)
+        sched = self._scheduler(B)
+        temps = _per_request(temperature, B, "temperature")
+        ks = _per_request(top_k, B, "top_k")
         prompts = np.asarray(tokens, np.int32)
         reqs = []
         for b in range(B):
+            # explicit key → per-slot keys fold in the BATCH ROW, not the
+            # engine-global rid: calling generate twice with the same key
+            # reproduces the same sampled tokens, and the scheduler's
+            # default key stream is left untouched for key=None calls
+            rk = (jax.random.fold_in(key, b) if key is not None else None)
             reqs.append(Request(rid=self._rid, tokens=prompts[b],
-                                max_new=max_new))
+                                max_new=max_new,
+                                temperature=float(temps[b]),
+                                top_k=int(ks[b]), key=rk))
             self._rid += 1
         done = {c.rid: c for c in sched.run(reqs)}
         out = np.stack([done[r.rid].tokens for r in reqs])
         return GenerationResult(tokens=jnp.asarray(out), prompt_len=S)
-
-    # -- synchronized fallback (recurrent-state families) -----------------
-
-    def _generate_sync(self, tokens, max_new, temperature, key):
-        B, S = tokens.shape
-        if temperature > 0.0 and key is None:
-            key = jax.random.PRNGKey(self.cfg.serve.seed)
-        logits, pre = self._prefill(self.params, {"tokens": tokens})
-        cache = self._seed_cache(tf.init_cache(self.cfg, B, self.max_seq),
-                                 pre)
-        out = []
-        cur = None
-        for t in range(max_new):
-            if t == 0:
-                lg = logits
-            else:
-                lg, cache = self._decode(self.params, cache, cur,
-                                         jnp.int32(S + t - 1))
-            lg = lg[:, :self.cfg.vocab_size]
-            if temperature > 0.0:
-                key, k = jax.random.split(key)
-                nxt = jax.random.categorical(k, lg / temperature, axis=-1)
-            else:
-                nxt = jnp.argmax(lg, axis=-1)
-            cur = nxt[:, None].astype(jnp.int32)
-            out.append(nxt)
-        return GenerationResult(tokens=jnp.stack(out, axis=1), prompt_len=S)
 
     # ------------------------------------------------------------------
 
@@ -156,4 +119,5 @@ class ServeEngine:
 
     def prefix_cache_stats(self):
         return {k: s.prefix_cache.stats
-                for k, s in self._schedulers.items()}
+                for k, s in self._schedulers.items()
+                if s.prefix_cache is not None}

@@ -86,19 +86,19 @@ class SketchPrefixCache:
         self._observed = 0
 
     # -- read path ---------------------------------------------------------
-    def lookup(self, tokens: np.ndarray, max_suffix: int
+    def lookup(self, tokens: np.ndarray, max_suffix: Optional[int] = None
                ) -> Optional[Tuple[int, Any]]:
-        """Longest cached block-multiple prefix of ``tokens`` whose
-        remaining suffix is at most ``max_suffix`` tokens (the engine
-        forced-decodes the suffix one token per step, so a hit that leaves
-        a huge suffix is slower than re-prefilling — treat it as a miss).
-        Returns (prefix_len, np KV block) and refreshes LRU recency."""
+        """Longest cached block-multiple prefix of ``tokens``.  The engine
+        chunk-prefills the remaining suffix at bucket granularity, so any
+        suffix length is serviceable; pass ``max_suffix`` to cap it anyway
+        (legacy forced-decode semantics).  Returns (prefix_len, np KV
+        block) and refreshes LRU recency."""
         self.stats.lookups += 1
         block = self.cfg.prefix_block
         n = len(tokens)
         for m in range(n // block, 0, -1):
             plen = m * block
-            if n - plen > max_suffix:
+            if max_suffix is not None and n - plen > max_suffix:
                 continue
             key = tuple(int(t) for t in tokens[:plen])
             ent = self._entries.get(key)

@@ -1,36 +1,55 @@
-"""Continuous-batching slot scheduler over a fixed preallocated KV cache.
+"""Continuous-batching slot scheduler over fixed preallocated per-slot state.
 
-The engine owns ``max_batch`` slots backed by one (L, max_batch, max_seq,
-K, hd) KV cache allocated up front — no cache regrowth, ever.  Decode runs
-as ONE jitted function for the engine's lifetime: a ``jax.lax.scan`` of
-``decode_chunk`` single-token steps over fixed shapes, with per-slot
-position / active / forced masks doing the work that used to require
-per-request shapes.  Requests of arbitrary (mixed) prompt lengths are
-admitted into free slots between chunks and retired when their token budget
-is spent; the decode step therefore compiles exactly once per engine (see
-``decode_compilations``), while prefill compiles once per prompt-length
-bucket (``cfg.serve.prefill_bucket``).
+The engine owns ``max_batch`` slots.  For attention families the slot state
+is one (L, max_batch, max_seq, K, hd) KV cache; for recurrent families
+(ssm / hybrid) it is the family's per-layer recurrent state stacked on the
+same slot axis ((L, max_batch, ...) leaves, plus the hybrid shared-KV
+rows).  Decode runs as ONE jitted function for the engine's lifetime: a
+``jax.lax.scan`` of single-token steps over fixed shapes, with per-slot
+position / active masks and per-slot sampling parameters doing the work
+that used to require per-request shapes.  Requests of arbitrary (mixed)
+prompt lengths, families and sampling settings are admitted into free
+slots between chunks and retired when their token budget is spent; the
+decode step therefore compiles exactly once per engine (see
+``decode_compilations``).
+
+Prefill:
+
+  * attention families (dense / moe / audio / vlm) use CHUNKED prefill:
+    the prompt is fed through ``tf.prefill_chunk`` in ``prefill_bucket``-
+    sized chunks written straight into the slot KV cache, each chunk
+    attending against everything below it.  Chunk starts are aligned to
+    absolute multiples of the bucket, so a prefix-cache hit resuming at
+    ``plen`` replays the same chunk boundaries a cold miss used — the two
+    paths produce bitwise-identical cache rows (the overlap recompute is
+    idempotent) and therefore identical tokens.  Slot and offset are
+    traced, so prefill compiles exactly once too, for any prompt length.
+  * recurrent families prefill the first S-1 prompt tokens exactly (no
+    padding — trailing pad tokens would corrupt a recurrence) and insert
+    the resulting state wholesale into the slot (the slot "reset"); the
+    last prompt token is fed through the first decode step, which advances
+    the state and samples the first output in-graph.  Prefill compiles per
+    distinct prompt length, as the synchronized fallback always did.
 
 Slot-uniform decode semantics (all shape-static):
 
-  * every slot decodes every step; inactive slots re-write their own stale
-    KV row, which is harmless: a row at position p is always (re)written
-    before any query attends to p (the mask allows positions <= pos, and
-    pos advances only after the write), so junk is never observed.
-  * a freshly admitted request resumes at ``pos = prefill_len - 1`` by
-    re-feeding its last prompt token: the recomputed KV row is identical
-    (it depends only on that token's residual stream) and the resulting
-    logits sample the first output token in-graph — prefill logits never
-    cross the host boundary.
-  * prompt tokens not covered by a prefix-cache hit are *forced*: the
-    per-slot forced queue overrides sampling and suppresses emission until
-    exhausted, which is how a cached prefix + uncached suffix runs through
-    the same compiled decode step.
+  * every slot decodes every step; inactive slots mutate only their own
+    state, which is harmless: KV rows at a position are always rewritten
+    before any query attends there, and recurrent slot state is replaced
+    wholesale at the next admit, so junk is never observed.
+  * a freshly admitted attention-family request resumes at
+    ``pos = S - 1`` by re-feeding its last prompt token: the recomputed KV
+    row is bit-identical (it depends only on that token's residual stream)
+    and the resulting logits sample the first output token in-graph —
+    prefill logits never cross the host boundary.
+  * sampling is per-slot: temperature / top-k / PRNG key live in (B,)
+    engine state set at admission, so greedy and sampled requests (and
+    different seeds) share the one compiled chunk.  A greedy slot's tokens
+    are bitwise-independent of its neighbours.
 
-Prefix reuse is gated by the count-min admission filter in
-serve/prefix_cache.py.  Supported families: those with a (L, B, S, K, hd)
-"kv" cache (dense / moe / audio / vlm); recurrent-state families are
-served by the synchronized fallback in serve/engine.py.
+Prefix reuse (attention families only — a recurrent state at a prefix
+boundary is not recoverable from an end-of-prompt prefill) is gated by the
+count-min admission filter in serve/prefix_cache.py.
 """
 from __future__ import annotations
 
@@ -47,6 +66,7 @@ from repro.models import transformer as tf
 from repro.serve.prefix_cache import SketchPrefixCache
 
 KV_FAMILIES = ("dense", "moe", "audio", "vlm")
+RECURRENT_FAMILIES = ("ssm", "hybrid")
 
 
 @dataclass
@@ -54,6 +74,14 @@ class Request:
     rid: int
     tokens: np.ndarray           # (S,) int32 prompt
     max_new: int
+    # per-request sampling: None temperature falls back to the scheduler
+    # default; top_k == 0 disables top-k filtering.  The slot PRNG key is
+    # ``key`` when given, else PRNGKey(seed), else derived from the
+    # scheduler's base key and the rid.
+    temperature: Optional[float] = None
+    top_k: int = 0
+    seed: Optional[int] = None
+    key: Optional[jax.Array] = None
 
 
 @dataclass
@@ -67,59 +95,59 @@ class Completion:
 class DecodeState(NamedTuple):
     """All device-resident engine state (a pytree; see
     launch.shardings.serve_state_pspecs for its mesh placement)."""
-    cache: Dict[str, Any]        # {"kv": {"k": (L,B,Smax,K,hd), "v": ...}}
+    cache: Dict[str, Any]        # family slot state, leaves (L|G, B, ...)
     cur: jax.Array               # (B, 1) next token to feed per slot
     pos: jax.Array               # (B,)  write/attend position per slot
     remaining: jax.Array         # (B,)  output tokens still owed per slot
-    forced: jax.Array            # (B, F) teacher-forced prompt suffixes
-    forced_n: jax.Array          # (B,)  forced-queue length per slot
-    forced_i: jax.Array          # (B,)  forced-queue cursor per slot
-    key: jax.Array               # (2,)  sampling PRNG key
-
-
-def _bucket(n: int, bucket: int) -> int:
-    return -(-n // bucket) * bucket
+    temp: jax.Array              # (B,)  sampling temperature per slot
+    top_k: jax.Array             # (B,)  top-k cutoff per slot (0 = off)
+    keys: jax.Array              # (B, 2) per-slot sampling PRNG keys
 
 
 class SlotScheduler:
     def __init__(self, cfg: ModelConfig, params: Any,
                  serve: Optional[ServeConfig] = None,
                  temperature: float = 0.0):
-        if cfg.family not in KV_FAMILIES:
-            raise ValueError(
-                f"SlotScheduler needs a kv cache family, got {cfg.family!r}")
+        if cfg.family not in KV_FAMILIES + RECURRENT_FAMILIES:
+            raise ValueError(f"unknown family {cfg.family!r}")
         self.cfg = cfg
         self.params = params
         self.serve = serve if serve is not None else cfg.serve
-        self.temperature = float(temperature)
+        self.temperature = float(temperature)   # default for requests
+        self.is_kv = cfg.family in KV_FAMILIES
         sv = self.serve
         B = sv.max_batch
-        # cap on the uncached suffix a prefix hit may leave (it is
-        # forced-decoded one token per step) and on the forced-queue
-        # width; decoupled from prefill padding so prefill_bucket=1
-        # (exact-length prefill, e.g. for moe) keeps hits possible.
-        self.max_suffix = max(sv.prefill_bucket, sv.prefix_block)
-        self.prefix_cache = SketchPrefixCache(sv)
+        # prefix reuse is a KV-cache concept; a recurrent scheduler gets
+        # no idle count-min table (and misuse fails loudly on None)
+        self.prefix_cache = SketchPrefixCache(sv) if self.is_kv else None
         self._queue: List[Request] = []
         self._slot_req: List[Optional[Request]] = [None] * B
         self._slot_out: List[List[int]] = [[] for _ in range(B)]
         self._slot_hit: List[bool] = [False] * B
         self.decode_steps = 0
         self.completed: List[Completion] = []
+        self._base_key = jax.random.PRNGKey(sv.seed)
 
         self._state = DecodeState(
             cache=tf.init_cache(cfg, B, sv.max_seq),
             cur=jnp.zeros((B, 1), jnp.int32),
             pos=jnp.zeros((B,), jnp.int32),
             remaining=jnp.zeros((B,), jnp.int32),
-            forced=jnp.zeros((B, self.max_suffix), jnp.int32),
-            forced_n=jnp.zeros((B,), jnp.int32),
-            forced_i=jnp.zeros((B,), jnp.int32),
-            key=jax.random.PRNGKey(sv.seed),
+            temp=jnp.zeros((B,), jnp.float32),
+            top_k=jnp.zeros((B,), jnp.int32),
+            keys=jnp.zeros((B, 2), jnp.uint32),
         )
         self._chunk_fn = jax.jit(self._make_chunk(), donate_argnums=(1,))
-        self._prefill = jax.jit(functools.partial(tf.prefill, cfg=cfg))
-        self._insert_fn = jax.jit(self._insert_kv, donate_argnums=(0,))
+        self._insert_fn = jax.jit(self._insert_state, donate_argnums=(0,))
+        if self.is_kv:
+            self._prefill_chunk = jax.jit(
+                functools.partial(tf.prefill_chunk, cfg=cfg),
+                donate_argnums=(1,))
+        else:
+            self._prefill = jax.jit(functools.partial(tf.prefill, cfg=cfg))
+            # slot "reset" block: zero state inserted before (or instead
+            # of, for 1-token prompts) the prefilled state
+            self._zero_block = tf.init_cache(cfg, 1, sv.max_seq)
 
     # ------------------------------------------------------------------
     # Compiled pieces
@@ -127,56 +155,76 @@ class SlotScheduler:
 
     def _make_chunk(self):
         cfg = self.cfg
-        temp = self.temperature
         chunk = self.serve.decode_chunk
 
+        def sample(key, lg, temp, top_k):
+            """Per-slot next token: greedy when temp == 0, else top-k
+            filtered temperature sampling with the slot's own key.  The
+            whole filter/sort/categorical branch is skipped in-graph
+            (lax.cond) when every slot is greedy, so greedy-only chunks
+            pay pure argmax while mixed chunks share the compilation."""
+            greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+
+            def do_sample(args):
+                key, lg = args
+                V = lg.shape[-1]
+                srt = jnp.sort(lg, axis=-1)[:, ::-1]
+                kth = jnp.take_along_axis(
+                    srt, jnp.clip(top_k - 1, 0, V - 1)[:, None],
+                    axis=1)[:, 0]
+                keep = (top_k <= 0)[:, None] | (lg >= kth[:, None])
+                filt = jnp.where(keep, lg, -jnp.inf)
+                scaled = filt / jnp.maximum(temp, 1e-6)[:, None]
+                split = jax.vmap(jax.random.split)(key)      # (B, 2, 2)
+                key, ks = split[:, 0], split[:, 1]
+                sampled = jax.vmap(jax.random.categorical)(ks, scaled)
+                return key, jnp.where(temp > 0.0,
+                                      sampled.astype(jnp.int32), greedy)
+
+            def do_greedy(args):
+                key, _ = args
+                return key, greedy
+
+            return jax.lax.cond(jnp.any(temp > 0.0), do_sample, do_greedy,
+                                (key, lg))
+
         def chunk_fn(params, state: DecodeState):
-            forced, forced_n = state.forced, state.forced_n
+            temp, top_k = state.temp, state.top_k
 
             def step(carry, _):
-                cache, cur, pos, remaining, forced_i, key = carry
-                is_forced = forced_i < forced_n
-                running = (remaining > 0) | is_forced
+                cache, cur, pos, remaining, keys = carry
+                running = remaining > 0
                 logits, cache = tf.decode_step(params, cache, cur, pos, cfg)
-                lg = logits[:, :cfg.vocab_size]
-                if temp > 0.0:
-                    key, k = jax.random.split(key)
-                    sampled = jax.random.categorical(k, lg / temp, axis=-1)
-                else:
-                    sampled = jnp.argmax(lg, axis=-1)
-                sampled = sampled.astype(jnp.int32)
-                ftok = jnp.take_along_axis(
-                    forced,
-                    jnp.clip(forced_i, 0, forced.shape[1] - 1)[:, None],
-                    axis=1)[:, 0]
-                nxt = jnp.where(is_forced, ftok, sampled)
-                emit = running & ~is_forced
+                lg = logits[:, :cfg.vocab_size].astype(jnp.float32)
+                keys, nxt = sample(keys, lg, temp, top_k)
+                nxt = nxt.astype(jnp.int32)
                 pos = pos + running.astype(jnp.int32)
-                remaining = remaining - emit.astype(jnp.int32)
-                forced_i = forced_i + is_forced.astype(jnp.int32)
-                return (cache, nxt[:, None], pos, remaining, forced_i, key), \
-                    (nxt, emit)
+                remaining = remaining - running.astype(jnp.int32)
+                return (cache, nxt[:, None], pos, remaining, keys), \
+                    (nxt, running)
 
             carry = (state.cache, state.cur, state.pos, state.remaining,
-                     state.forced_i, state.key)
-            (cache, cur, pos, remaining, forced_i, key), (toks, emits) = \
+                     state.keys)
+            (cache, cur, pos, remaining, keys), (toks, emits) = \
                 jax.lax.scan(step, carry, None, length=chunk)
             new_state = DecodeState(cache=cache, cur=cur, pos=pos,
-                                    remaining=remaining, forced=forced,
-                                    forced_n=forced_n, forced_i=forced_i,
-                                    key=key)
+                                    remaining=remaining, temp=temp,
+                                    top_k=top_k, keys=keys)
             return new_state, toks, emits        # toks/emits: (chunk, B)
 
         return chunk_fn
 
     @staticmethod
-    def _insert_kv(cache, block, slot):
-        """Write a prefill KV block ({"k","v"} leaves (L, 1, S_b, K, hd))
-        into slot ``slot`` of the full cache at positions [0, S_b)."""
+    def _insert_state(cache, block, slot):
+        """Write a per-request prefill block (leaves (X, 1, ...)) into slot
+        ``slot`` of the preallocated slot state (leaves (X, B, ...)):
+        KV-block leaves land at sequence offset 0, equal-shape recurrent
+        leaves are replaced wholesale — the slot 'reset' that makes any
+        stale state from the slot's previous occupant unobservable."""
         def one(c, b):
             return jax.lax.dynamic_update_slice(
-                c, b.astype(c.dtype), (0, slot, 0, 0, 0))
-        return {**cache, "kv": jax.tree.map(one, cache["kv"], block)}
+                c, b.astype(c.dtype), (0, slot) + (0,) * (c.ndim - 2))
+        return jax.tree.map(one, cache, block)
 
     # ------------------------------------------------------------------
     # Scheduling
@@ -187,56 +235,93 @@ class SlotScheduler:
         S = len(req.tokens)
         assert req.max_new >= 1, "requests must ask for at least one token"
         assert S >= 1, "empty prompt"
-        # the last write lands at position S - 1 + max_new (bucketed
-        # prefill is capped at max_seq in _admit)
+        # the last write lands at position S - 1 + max_new
         assert S + req.max_new <= sv.max_seq, (
             f"prompt {S} + max_new {req.max_new} exceeds max_seq "
             f"{sv.max_seq}")
         self._queue.append(req)
 
     def reseed(self, key: jax.Array) -> None:
-        """Replace the sampling PRNG key (no-op for greedy decoding)."""
-        self._state = self._state._replace(key=key)
+        """Replace the base sampling key: per-slot keys for requests
+        without an explicit seed derive from it (folded with the rid)."""
+        self._base_key = key
+
+    def _request_key(self, req: Request) -> jax.Array:
+        if req.key is not None:
+            return req.key
+        if req.seed is not None:
+            return jax.random.PRNGKey(req.seed)
+        return jax.random.fold_in(self._base_key, req.rid)
+
+    def _chunk_prefill_loop(self, cache, prompt: np.ndarray, slot: int,
+                            start_off: int):
+        """Feed prompt rows [start_off, S) through bucket-sized prefill
+        chunks.  Starts are aligned to absolute bucket multiples (and the
+        tail chunk is clamped into [0, max_seq - bucket]), so the chunk
+        boundaries — and hence the cache rows — are identical whether the
+        loop starts at 0 (cold miss) or at a cached-prefix boundary (hit);
+        overlap rows recompute to the same values they already hold."""
+        sv = self.serve
+        S = len(prompt)
+        if start_off >= S:
+            return cache
+        bucket = max(1, min(sv.prefill_bucket, sv.max_seq))
+        off = (start_off // bucket) * bucket
+        while off < S:
+            start = min(off, sv.max_seq - bucket)
+            seg = prompt[start:start + bucket]
+            tok = np.zeros((1, bucket), np.int32)
+            tok[0, :len(seg)] = seg
+            cache = self._prefill_chunk(self.params, cache,
+                                        jnp.asarray(tok), jnp.int32(slot),
+                                        jnp.int32(start))
+            off += bucket
+        return cache
 
     def _admit(self, slot: int, req: Request) -> None:
-        sv = self.serve
         prompt = np.asarray(req.tokens, np.int32)
         S = len(prompt)
-        hit = self.prefix_cache.lookup(prompt, max_suffix=self.max_suffix)
-        if hit is not None:
-            plen, block_np = hit
-            self.prefix_cache.touch(prompt)      # hits keep counts fresh
-            block = jax.tree.map(jnp.asarray, block_np)
-            forced_tail = prompt[plen:]          # fed after cur, may be empty
-        else:
-            admit_plen = self.prefix_cache.observe(prompt)
-            S_b = min(_bucket(S, sv.prefill_bucket), sv.max_seq)
-            padded = np.zeros((1, S_b), np.int32)
-            padded[0, :S] = prompt
-            _, pre = self._prefill(self.params, {"tokens": jnp.asarray(padded)})
-            block = pre["kv"]
-            if admit_plen is not None:
-                self.prefix_cache.admit(
-                    prompt, admit_plen,
-                    jax.tree.map(lambda a: a[:, :, :admit_plen], block))
-            plen = S
-            forced_tail = prompt[S:]             # empty
-        # resume at plen-1 by re-feeding the last covered prompt token: its
-        # KV row recomputes bit-identically and its logits feed the first
-        # forced/sampled step in-graph.
-        cur_tok = int(prompt[plen - 1])
-        start = plen - 1
-        fbuf = np.zeros((self.max_suffix,), np.int32)
-        fbuf[:len(forced_tail)] = forced_tail
         st = self._state
+        hit = None
+        if self.is_kv:
+            hit = self.prefix_cache.lookup(prompt)
+            admit_plen = None
+            if hit is not None:
+                plen, block_np = hit
+                self.prefix_cache.touch(prompt)  # hits keep counts fresh
+                block = jax.tree.map(jnp.asarray, block_np)
+                cache = self._insert_fn(st.cache, {"kv": block},
+                                        jnp.int32(slot))
+                start_off = plen
+            else:
+                admit_plen = self.prefix_cache.observe(prompt)
+                cache, start_off = st.cache, 0
+            cache = self._chunk_prefill_loop(cache, prompt, slot, start_off)
+            if admit_plen is not None:
+                blk = jax.tree.map(
+                    lambda a: np.asarray(a[:, slot:slot + 1, :admit_plen]),
+                    cache["kv"])
+                self.prefix_cache.admit(prompt, admit_plen, blk)
+        else:
+            # recurrent: exact-length prefill of all but the last token
+            # (decode applies it — a recurrent step is not idempotent, so
+            # unlike KV rows the last token must be consumed exactly once)
+            if S > 1:
+                _, pre = self._prefill(
+                    self.params, {"tokens": jnp.asarray(prompt[None, :-1])})
+            else:
+                pre = self._zero_block        # fresh state, reset only
+            cache = self._insert_fn(st.cache, pre, jnp.int32(slot))
+        temp = (self.temperature if req.temperature is None
+                else float(req.temperature))
         st = st._replace(
-            cache=self._insert_fn(st.cache, block, jnp.int32(slot)),
-            cur=st.cur.at[slot, 0].set(cur_tok),
-            pos=st.pos.at[slot].set(start),
+            cache=cache,
+            cur=st.cur.at[slot, 0].set(int(prompt[S - 1])),
+            pos=st.pos.at[slot].set(S - 1),
             remaining=st.remaining.at[slot].set(req.max_new),
-            forced=st.forced.at[slot].set(jnp.asarray(fbuf)),
-            forced_n=st.forced_n.at[slot].set(len(forced_tail)),
-            forced_i=st.forced_i.at[slot].set(0),
+            temp=st.temp.at[slot].set(temp),
+            top_k=st.top_k.at[slot].set(int(req.top_k)),
+            keys=st.keys.at[slot].set(self._request_key(req)),
         )
         self._state = st
         self._slot_req[slot] = req
@@ -303,8 +388,17 @@ class SlotScheduler:
     def decode_compilations(self) -> int:
         """Number of times the chunked decode step has been compiled —
         the engine's contract is that this is 1 for its whole lifetime,
-        regardless of the request mix."""
+        regardless of the request mix (lengths, families, sampling)."""
         return self._chunk_fn._cache_size()
+
+    @property
+    def prefill_compilations(self) -> int:
+        """Attention families: 1 for the engine's lifetime (the chunked
+        prefill step is offset-traced).  Recurrent families: one per
+        distinct prompt length (exact-length prefill)."""
+        if self.is_kv:
+            return self._prefill_chunk._cache_size()
+        return self._prefill._cache_size()
 
     @property
     def state(self) -> DecodeState:

@@ -1,7 +1,7 @@
 """Continuous-batching engine: slot-cache decode correctness against
-per-request full-context recompute, single decode compilation for mixed
-request streams, count-min gated prefix caching, and the sampling-key
-regression."""
+per-request full-context recompute (all families), chunked prefill,
+per-request sampling, single decode compilation for mixed request
+streams, and count-min gated prefix caching."""
 import dataclasses
 
 import jax
@@ -14,7 +14,6 @@ from repro.models import layers as ly
 from repro.models import model as M
 from repro.models import transformer as tf
 from repro.serve.engine import ServeEngine
-from repro.serve.prefix_cache import SketchPrefixCache
 from repro.serve.scheduler import Request, SlotScheduler
 from repro.sketch import csvec
 
@@ -43,10 +42,9 @@ def _oracle_continuation(cfg, params, prompt: np.ndarray, n: int):
 
 def test_mixed_length_stream_matches_recompute_and_compiles_once(gemma):
     """The tentpole contract: a stream of mixed-length, mixed-budget
-    requests through the padded/masked slot cache decodes token-for-token
-    identically to per-request full-context recompute (this pins down what
-    the old _grow_cache heuristic provided), while the decode step
-    compiles exactly once (jit cache stats)."""
+    requests through the chunk-prefilled slot cache decodes
+    token-for-token identically to per-request full-context recompute,
+    while decode AND chunked prefill each compile exactly once."""
     cfg, params = gemma
     serve = dataclasses.replace(cfg.serve, max_batch=3, max_seq=96,
                                 decode_chunk=4, prefill_bucket=16)
@@ -65,34 +63,62 @@ def test_mixed_length_stream_matches_recompute_and_compiles_once(gemma):
         np.testing.assert_array_equal(done[r.rid].tokens, ref,
                                       err_msg=f"rid {r.rid}")
     assert sched.decode_compilations == 1
+    assert sched.prefill_compilations == 1
 
 
-def test_prefix_cache_hit_path_matches_miss_path(gemma):
-    """Count-min admission: a repeated prompt is admitted once its
-    estimated frequency clears the threshold, later requests hit, and the
-    hit path (cached KV + forced suffix decode) reproduces the miss path
-    exactly.  Decode stays at one compilation throughout."""
+@pytest.mark.parametrize("arch", ["xlstm-1.3b", "zamba2-2.7b"])
+def test_recurrent_slot_stream_matches_recompute(arch):
+    """ssm / hybrid requests ride the slot scheduler (no synchronized
+    fallback): mixed-length streams — including a 1-token prompt, which
+    exercises the zero-state slot reset — match full-context recompute
+    token-for-token, with one decode compilation."""
+    cfg = reduced_config(arch)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    serve = dataclasses.replace(cfg.serve, max_batch=2, max_seq=48,
+                                decode_chunk=4)
+    sched = SlotScheduler(cfg, params, serve=serve)
+    rng = np.random.RandomState(0)
+    reqs = [Request(rid=i,
+                    tokens=rng.randint(0, cfg.vocab_size, (n,)).astype(
+                        np.int32),
+                    max_new=3)
+            for i, n in enumerate([6, 11, 1, 9])]
+    done = {c.rid: c for c in sched.run(list(reqs))}
+    for r in reqs:
+        ref = _oracle_continuation(cfg, params, r.tokens, r.max_new)
+        np.testing.assert_array_equal(done[r.rid].tokens, ref,
+                                      err_msg=f"{arch} rid {r.rid}")
+    assert sched.decode_compilations == 1
+
+
+def test_chunked_prefill_hit_matches_miss_multi_bucket(gemma):
+    """A cached-prefix hit whose uncached suffix spans MULTIPLE prefill
+    buckets is chunk-prefilled against the slot cache and reproduces the
+    cold-miss output token-for-token; decode and prefill each stay at one
+    compilation."""
     cfg, params = gemma
     serve = dataclasses.replace(cfg.serve, max_batch=2, max_seq=96,
-                                prefill_bucket=16, prefix_block=16,
+                                prefill_bucket=8, prefix_block=16,
                                 admit_threshold=2)
     sched = SlotScheduler(cfg, params, serve=serve)
     rng = np.random.RandomState(1)
-    prompt = rng.randint(0, cfg.vocab_size, (21,)).astype(np.int32)
+    prompt = np.concatenate([
+        rng.randint(0, cfg.vocab_size, (16,)).astype(np.int32),   # prefix
+        rng.randint(0, cfg.vocab_size, (20,)).astype(np.int32)])  # suffix
+    assert len(prompt) - 16 > serve.prefill_bucket   # suffix > 1 bucket
     outs = []
     for i in range(4):
         done = sched.run([Request(rid=i, tokens=prompt, max_new=5)])
-        outs.append(done[0].tokens)
+        outs.append(done[0])
     st = sched.prefix_cache.stats
-    assert st.admitted >= 1
-    assert st.hits >= 1
-    assert sched.run(
-        [Request(rid=99, tokens=prompt, max_new=5)])[0].prefix_hit
+    assert st.admitted >= 1 and st.hits >= 1
+    assert outs[-1].prefix_hit and not outs[0].prefix_hit
     for o in outs[1:]:
-        np.testing.assert_array_equal(o, outs[0])
+        np.testing.assert_array_equal(o.tokens, outs[0].tokens)
     np.testing.assert_array_equal(
-        outs[0], _oracle_continuation(cfg, params, prompt, 5))
+        outs[0].tokens, _oracle_continuation(cfg, params, prompt, 5))
     assert sched.decode_compilations == 1
+    assert sched.prefill_compilations == 1
 
 
 def test_prefix_cache_respects_byte_budget(gemma):
@@ -118,9 +144,9 @@ def test_prefix_cache_respects_byte_budget(gemma):
 
 
 def test_exact_length_prefill_still_hits(gemma):
-    """prefill_bucket=1 (exact-length prefill, the documented moe setting)
-    must not disable prefix-cache hits: the forced-suffix capacity is
-    governed by prefix_block, not the prefill padding granularity."""
+    """prefill_bucket=1 (exact-length chunks, the documented moe setting)
+    must not disable prefix-cache hits — chunked prefill degenerates to
+    token-by-token but the hit path still works."""
     cfg, params = gemma
     serve = dataclasses.replace(cfg.serve, max_batch=2, max_seq=96,
                                 prefill_bucket=1, prefix_block=8,
@@ -136,6 +162,65 @@ def test_exact_length_prefill_still_hits(gemma):
         np.testing.assert_array_equal(o.tokens, outs[0].tokens)
     np.testing.assert_array_equal(
         outs[0].tokens, _oracle_continuation(cfg, params, prompt, 4))
+
+
+def test_mixed_per_request_sampling_one_compilation(gemma):
+    """Greedy and sampled requests share one compiled chunk: a mixed
+    temperature/top-k batch compiles decode once, its greedy slots
+    bitwise-match a solo all-greedy run, and a fixed per-request seed
+    reproduces the sampled stream regardless of rid / slot placement."""
+    cfg, params = gemma
+    rng = np.random.RandomState(4)
+    prompts = jnp.asarray(rng.randint(0, cfg.vocab_size, (3, 12)),
+                          jnp.int32)
+    eng = ServeEngine(cfg, params, max_seq=96)
+    mixed = eng.generate(prompts, max_new=6,
+                         temperature=[0.0, 0.8, 0.0], top_k=[0, 4, 0])
+    assert eng.decode_compilations == 1
+    solo = ServeEngine(cfg, params, max_seq=96).generate(
+        prompts, max_new=6, temperature=0.0)
+    got, ref = np.asarray(mixed.tokens), np.asarray(solo.tokens)
+    np.testing.assert_array_equal(got[0], ref[0])
+    np.testing.assert_array_equal(got[2], ref[2])
+    # sampled tokens stay in-vocab
+    assert int(np.max(got[1])) < cfg.vocab_size
+    # per-request seed → reproducible sampling, independent of rid
+    serve = dataclasses.replace(cfg.serve, max_batch=2, max_seq=96)
+    prompt = np.asarray(prompts[0])
+    r1 = SlotScheduler(cfg, params, serve=serve).run(
+        [Request(rid=0, tokens=prompt, max_new=5, temperature=0.9,
+                 seed=7)])[0]
+    r2 = SlotScheduler(cfg, params, serve=serve).run(
+        [Request(rid=99, tokens=prompt, max_new=5, temperature=0.9,
+                 seed=7)])[0]
+    np.testing.assert_array_equal(r1.tokens, r2.tokens)
+
+
+def test_mixed_family_stream_single_compilation():
+    """One engine per family, mixed greedy/sampled requests in the same
+    stream: the decode chunk still compiles exactly once per engine for
+    recurrent families too (the acceptance-criteria contract)."""
+    cfg = reduced_config("xlstm-1.3b")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    serve = dataclasses.replace(cfg.serve, max_batch=2, max_seq=48,
+                                decode_chunk=4)
+    sched = SlotScheduler(cfg, params, serve=serve)
+    rng = np.random.RandomState(5)
+    reqs = [Request(rid=i,
+                    tokens=rng.randint(0, cfg.vocab_size, (n,)).astype(
+                        np.int32),
+                    max_new=3,
+                    temperature=0.8 if i % 2 else 0.0,
+                    top_k=4 if i % 2 else 0, seed=i)
+            for i, n in enumerate([6, 9, 4, 11])]
+    done = {c.rid: c for c in sched.run(list(reqs))}
+    assert len(done) == len(reqs)
+    assert sched.decode_compilations == 1
+    # greedy requests still match the oracle in the mixed stream
+    for r in reqs:
+        if r.temperature == 0.0:
+            ref = _oracle_continuation(cfg, params, r.tokens, r.max_new)
+            np.testing.assert_array_equal(done[r.rid].tokens, ref)
 
 
 def test_param_swap_invalidates_schedulers(gemma):
@@ -157,26 +242,31 @@ def test_param_swap_invalidates_schedulers(gemma):
 
 def test_generate_temperature_without_key(gemma):
     """Regression: temperature > 0 with key=None used to crash in
-    jax.random.split(None); it must fall back to a seeded PRNGKey."""
+    jax.random.split(None); per-slot keys must fall back to seeded
+    derivation.  An explicit key must be honored AND deterministic:
+    the same key reproduces the same sampled tokens across calls (keys
+    fold in the batch row, not the ever-growing engine rid)."""
     cfg, params = gemma
     engine = ServeEngine(cfg, params, max_seq=64)
     prompts = jnp.ones((2, 8), jnp.int32)
     res = engine.generate(prompts, max_new=4, temperature=0.7)
     assert res.tokens.shape == (2, 4)
     assert int(res.tokens.max()) < cfg.vocab_size
-    # and an explicit key is still honored
-    res2 = engine.generate(prompts, max_new=4, temperature=0.7,
-                           key=jax.random.PRNGKey(3))
-    assert res2.tokens.shape == (2, 4)
+    k = jax.random.PRNGKey(3)
+    res2 = engine.generate(prompts, max_new=4, temperature=0.7, key=k)
+    res3 = engine.generate(prompts, max_new=4, temperature=0.7, key=k)
+    np.testing.assert_array_equal(np.asarray(res2.tokens),
+                                  np.asarray(res3.tokens))
 
 
-def test_recurrent_fallback_no_temperature_crash():
+def test_recurrent_engine_no_temperature_crash():
     cfg = reduced_config("xlstm-1.3b")
     params = M.init_params(jax.random.PRNGKey(0), cfg)
     engine = ServeEngine(cfg, params, max_seq=32)
     res = engine.generate(jnp.ones((2, 6), jnp.int32), max_new=3,
                           temperature=0.9)
     assert res.tokens.shape == (2, 3)
+    assert engine.decode_compilations == 1
 
 
 def test_countmin_decay_ages_counts():
@@ -200,25 +290,31 @@ def test_countmin_decay_ages_counts():
     assert float(csvec.query(one, np.array([7], np.int32))[0]) == 0.0
 
 
-def test_serve_state_pspecs():
-    """Slot-cache decode specs: kv leaves split-KV over model on the seq
-    axis, per-slot vectors on the batch axis, key replicated."""
+@pytest.mark.parametrize("arch", ["gemma-2b", "xlstm-1.3b"])
+def test_serve_state_pspecs(arch):
+    """Slot-state decode specs: kv leaves split-KV over model on the seq
+    axis (attention) / recurrent leaves per cache_pspecs, per-slot
+    bookkeeping and sampling state on the batch axis."""
     from jax.sharding import PartitionSpec as P
 
     from repro.launch.shardings import serve_state_pspecs
     from repro.models.sharding import decode_rules
 
-    cfg = reduced_config("gemma-2b")
+    cfg = reduced_config(arch)
     params = M.init_params(jax.random.PRNGKey(0), cfg)
     serve = dataclasses.replace(cfg.serve, max_batch=2, max_seq=64)
     sched = SlotScheduler(cfg, params, serve=serve)
     rules = decode_rules(multi_pod=False, long_context=False)
     specs = serve_state_pspecs(cfg, sched.state, rules)
-    k_spec = specs.cache["kv"]["k"]
-    assert k_spec == P(None, rules["batch"], "model", None, None)
-    assert specs.pos == P(rules["batch"])
-    assert specs.forced == P(rules["batch"], None)
-    assert specs.key == P(None)
+    b = rules["batch"]
+    if arch == "gemma-2b":
+        assert specs.cache["kv"]["k"] == P(None, b, "model", None, None)
+    else:
+        assert specs.cache["mlstm"]["C"][1] == b
+    assert specs.pos == P(b)
+    assert specs.temp == P(b)
+    assert specs.top_k == P(b)
+    assert specs.keys == P(b, None)
 
 
 def test_rtpm_nan_safe_selection():
