@@ -1,6 +1,13 @@
 """Continuous-batching serve benchmark: per-family tok/s, prefix-cache hit
-rate, and chunked-prefill hit latency over mixed-length request streams
-with shared system prefixes.
+rate, paged-KV reserved-vs-used bytes, and chunked-prefill hit latency
+over mixed-length request streams with shared system prefixes.
+
+Attention families run at a big ``kv_max_seq`` to measure the paged pool:
+the row reports peak RESERVED KV bytes (allocated blocks), peak USED KV
+bytes ((S + max_new) rows of live requests), and the dense
+max_batch * max_seq equivalent — the mixed-length stream must show a
+>= 4x reserved-bytes reduction over the dense cache (asserted), since
+reservations scale with allocated blocks, not engine geometry.
 
 One row per served family — transformer (dense) vs recurrent (ssm /
 hybrid) — so the slot scheduler's two state layouts are measured
@@ -75,9 +82,21 @@ def _stream(arch: str, n_requests: int, n_prefixes: int, prefix_len: int,
         assert sched.prefill_compilations == 1, sched.prefill_compilations
         assert st.bytes <= serve.prefix_cache_bytes, (
             st.bytes, serve.prefix_cache_bytes)
+        reserved = sched.kv_peak_reserved_bytes()
+        used = sched.kv_peak_used_bytes()
+        dense = sched.kv_dense_equiv_bytes()
+        reduction = dense / max(reserved, 1)
+        # the paged-pool contract: reservations scale with allocated
+        # blocks, not max_batch * max_seq
+        assert reduction >= 4.0, (reserved, dense)
         derived += (f";hit_rate={st.hit_rate:.2f};cached_bytes={st.bytes};"
                     f"budget={serve.prefix_cache_bytes};"
-                    f"tracker_bytes={sched.prefix_cache.tracker_bytes()}")
+                    f"tracker_bytes={sched.prefix_cache.tracker_bytes()};"
+                    f"kv_pool_bytes={sched.kv_cache_bytes()};"
+                    f"kv_peak_reserved_bytes={reserved};"
+                    f"kv_peak_used_bytes={used};"
+                    f"kv_dense_equiv_bytes={dense};"
+                    f"kv_reduction={reduction:.1f}")
     emit(f"serve/continuous_batch/{arch}", dt / max(toks, 1), derived)
 
 
@@ -125,11 +144,17 @@ def _hit_latency(arch: str, prefix_len: int, suffix_len: int, max_new: int,
 def run(archs=("gemma-2b", "xlstm-1.3b", "zamba2-2.7b"),
         n_requests: int = 24, n_prefixes: int = 3, prefix_len: int = 32,
         max_tail: int = 12, max_new: int = 8, max_batch: int = 4,
-        max_seq: int = 128, sampled_frac: float = 0.25,
-        hit_suffix: int = 48) -> None:
+        max_seq: int = 128, kv_max_seq: int = 512,
+        sampled_frac: float = 0.25, hit_suffix: int = 48) -> None:
     for arch in archs:
+        # attention families get the big-max_seq geometry: the paged pool
+        # makes sequence capacity nearly free (blocks are reserved per
+        # request), while recurrent families still preallocate dense
+        # per-slot state and stay at the small max_seq
+        fam_seq = (kv_max_seq if reduced_config(arch).family in KV_FAMILIES
+                   else max_seq)
         _stream(arch, n_requests, n_prefixes, prefix_len, max_tail,
-                max_new, max_batch, max_seq, sampled_frac)
+                max_new, max_batch, fam_seq, sampled_frac)
     # chunked-prefill hit latency: suffix spans multiple prefill buckets
     _hit_latency("gemma-2b", prefix_len=prefix_len, suffix_len=hit_suffix,
                  max_new=max_new, max_seq=max_seq)

@@ -1,0 +1,83 @@
+"""Compare two bench JSON artifacts (``benchmarks.run --json``) and print
+the trend — the CI bench-smoke job runs this against the previous
+commit's artifact so the perf trajectory (tok/s, hit rates, paged-KV
+bytes) is published per commit, not just archived.
+
+  python -m benchmarks.compare baseline.json current.json
+
+Informational by default (exit 0): machine noise on shared CI runners
+makes hard latency gates flaky; the table is for humans and the artifact
+trail.  ``--max-regress R`` turns it into a gate: exit 1 if any row's
+us_per_call regressed by more than the factor R.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# derived metrics worth tracking across commits (higher-is-better marked)
+TRACKED = ("tok_s", "hit_rate", "kv_peak_reserved_bytes",
+           "kv_peak_used_bytes", "kv_reduction", "cached_bytes",
+           "sketch_bytes_ratio")
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        rows = json.load(f)
+    return {r["name"]: r for r in rows}
+
+
+def _metrics(row: dict) -> dict:
+    m = row.get("metrics")
+    if m is None:                     # artifact from before metrics existed
+        from benchmarks.run import _parse_derived
+        m = _parse_derived(row.get("derived", ""))
+    return m
+
+
+def compare(base: dict, cur: dict, max_regress: float = 0.0) -> int:
+    names = list(cur) + [n for n in base if n not in cur]
+    worst = 0.0
+    print(f"{'name':44s} {'us/call':>12s} {'Δ':>8s}  tracked metrics")
+    for n in names:
+        b, c = base.get(n), cur.get(n)
+        if c is None:
+            print(f"{n:44s} {'(gone)':>12s}")
+            continue
+        us = c["us_per_call"]
+        if b is None:
+            print(f"{n:44s} {us:12.2f} {'(new)':>8s}")
+            continue
+        ratio = us / max(b["us_per_call"], 1e-12)
+        worst = max(worst, ratio)
+        bits = []
+        bm, cm = _metrics(b), _metrics(c)
+        for k in TRACKED:
+            if k in cm and isinstance(cm[k], float):
+                if isinstance(bm.get(k), float) and bm[k] not in (0.0,):
+                    bits.append(f"{k}={cm[k]:g} ({cm[k]/bm[k]-1.0:+.0%})")
+                else:
+                    bits.append(f"{k}={cm[k]:g}")
+        print(f"{n:44s} {us:12.2f} {ratio:7.2f}x  {'; '.join(bits)}")
+    if max_regress and worst > max_regress:
+        print(f"# FAIL: worst us/call regression {worst:.2f}x exceeds "
+              f"--max-regress {max_regress}", file=sys.stderr)
+        return 1
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline", help="previous bench JSON artifact")
+    ap.add_argument("current", help="freshly produced bench JSON")
+    ap.add_argument("--max-regress", type=float, default=0.0,
+                    help="fail (exit 1) if any row's us_per_call grew by "
+                         "more than this factor (0 = informational)")
+    args = ap.parse_args()
+    sys.exit(compare(_load(args.baseline), _load(args.current),
+                     args.max_regress))
+
+
+if __name__ == "__main__":
+    main()

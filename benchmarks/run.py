@@ -16,13 +16,30 @@ import sys
 import time
 
 
+def _parse_derived(derived: str) -> dict:
+    """Split a ``k=v;k=v`` derived string into typed metric columns so the
+    JSON artifact carries comparable numbers (tok_s, hit_rate, the paged
+    kv_*_bytes columns, ...) instead of one opaque string."""
+    metrics = {}
+    for part in derived.split(";"):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        try:
+            metrics[k] = float(v.rstrip("x"))
+        except ValueError:
+            metrics[k] = v
+    return metrics
+
+
 def _write_json(path: str) -> None:
     from benchmarks.common import ROWS
     rows = []
     for r in ROWS:
         name, us, derived = r.split(",", 2)
         rows.append({"name": name, "us_per_call": float(us),
-                     "derived": derived})
+                     "derived": derived,
+                     "metrics": _parse_derived(derived)})
     with open(path, "w") as f:
         json.dump(rows, f, indent=1)
     print(f"# wrote {len(rows)} rows to {path}", file=sys.stderr)

@@ -69,14 +69,26 @@ class ServeConfig:
     still compete in expert-capacity dispatch — set 1 for exact-length
     chunks.  Recurrent families ignore it (exact-length prefill: trailing
     pad tokens would corrupt a recurrence).
+    ``kv_block_size``: paged-KV page size in tokens.  Attention families
+    store KV in a (L, num_kv_blocks, kv_block_size, K, hd) block pool;
+    each slot holds a block table of physical block ids, so a request
+    reserves ceil((S + max_new) / kv_block_size) blocks instead of
+    max_seq rows.  Must divide ``prefix_block`` so cached prefixes share
+    whole pool blocks by reference.
+    ``num_kv_blocks``: pool size in blocks; 0 (default) auto-sizes to the
+    dense equivalent, max_batch * ceil(max_seq / kv_block_size) — set it
+    lower to cap pool memory (admission then waits for free blocks and
+    evicts idle prefix-cache entries under pressure).
     ``admit_threshold``: a prompt prefix's KV block is admitted to the
     bounded prefix cache only once its count-min estimated frequency
     reaches this value (TinyLFU-style sketch-gated admission; count-min's
     one-sided overestimate can only admit early, never starve).
     ``prefix_block``: prefix granularity in tokens — block-multiple
     prefixes are counted/cached.
-    ``prefix_cache_bytes``: hard byte budget for cached KV blocks (LRU
-    eviction keeps the total at or under this).
+    ``prefix_cache_bytes``: hard byte budget for prefix-cache-held pool
+    blocks (LRU eviction keeps the total at or under this; an entry's
+    blocks only return to the free list when no live slot references
+    them).
     ``cm_cols``/``cm_rows``: count-min table geometry (O(table) state
     regardless of unique-prompt cardinality).
     ``cm_decay_every``/``cm_decay``: every N observed prompts the counts
@@ -87,6 +99,8 @@ class ServeConfig:
     max_seq: int = 512
     decode_chunk: int = 8
     prefill_bucket: int = 32
+    kv_block_size: int = 16
+    num_kv_blocks: int = 0
     admit_threshold: int = 2
     prefix_block: int = 16
     prefix_cache_bytes: int = 1 << 24

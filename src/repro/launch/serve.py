@@ -110,6 +110,11 @@ def main():
               f"evicted={st.evicted}, cached_bytes={st.bytes} "
               f"(budget {serve.prefix_cache_bytes}), "
               f"tracker_bytes={sched.prefix_cache.tracker_bytes()}")
+        print(f"paged KV: {sched.num_blocks} blocks x {sched.block_size} "
+              f"tokens, peak_reserved={sched.kv_peak_reserved_bytes()}B "
+              f"peak_used={sched.kv_peak_used_bytes()}B vs dense "
+              f"{sched.kv_dense_equiv_bytes()}B "
+              f"({sched.kv_dense_equiv_bytes() / max(sched.kv_peak_reserved_bytes(), 1):.1f}x)")
     else:
         print(f"recurrent family ({cfg.family}): slot-scheduled state, "
               f"prefix cache n/a")

@@ -277,24 +277,36 @@ def serve_state_pspecs(cfg: ModelConfig, state: Any,
                        rules: Dict[str, MeshAxes]) -> Any:
     """PartitionSpecs for a serve.scheduler.DecodeState pytree.
 
-    The slot state reuses the decode cache placement — for attention
-    families slots are the batch dim of the KV cache ((L, B_slots, S_max,
-    K, hd) with kv_seq split-KV over "model"); for recurrent families the
-    stacked per-layer states carry the same (X, B_slots, ...) layout and
-    cache_pspecs already places every leaf kind.  Per-slot bookkeeping
+    Attention families carry a PAGED KV pool ((L, num_blocks, block_size,
+    K, hd)): physical blocks are interchangeable, so the block axis takes
+    the split-KV role the dense cache's seq axis had (rules["kv_blocks"],
+    "model" on the decode mesh) and block tables replicate — every shard
+    needs the full logical->physical map to gather its resident blocks.
+    Recurrent families keep the stacked per-layer (X, B_slots, ...) slot
+    states that cache_pspecs already places.  Per-slot bookkeeping
     (cur/pos/remaining) and per-slot sampling state (temp/top_k/keys) ride
-    the same batch axis so scheduler masks and the per-slot PRNG splits
-    stay local to the slot's shard.  Built for the launch drivers: on a
-    mesh, jit the decode chunk with these as in/out shardings (donated
-    state keeps the placement stable across chunks).
+    the batch axis so scheduler masks and the per-slot PRNG splits stay
+    local to the slot's shard.  Built for the launch drivers: on a mesh,
+    jit the decode chunk with these as in/out shardings (donated state
+    keeps the placement stable across chunks).
     """
     from repro.serve.scheduler import DecodeState
 
     assert isinstance(state, DecodeState)
     b = rules.get("batch")
     slot = lambda a: P(*((b,) + (None,) * (a.ndim - 1)))
+    paged = state.tables.shape[-1] > 0
+    if paged:
+        kb = rules.get("kv_blocks")
+        cache_specs = {"kv": jax.tree.map(
+            lambda a: P(None, kb, None, None, None), state.cache["kv"])}
+        tables = P(None, None)
+    else:
+        cache_specs = cache_pspecs(cfg, state.cache, rules)
+        tables = slot(state.tables)
     return DecodeState(
-        cache=cache_pspecs(cfg, state.cache, rules),
+        cache=cache_specs,
+        tables=tables,
         cur=slot(state.cur),
         pos=slot(state.pos),
         remaining=slot(state.remaining),

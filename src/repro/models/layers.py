@@ -197,16 +197,29 @@ def _project_qkv_rope(p: dict, x: jax.Array, cfg: ModelConfig,
 
 
 def decode_attention(p: dict, x: jax.Array, cfg: ModelConfig,
-                     cache: dict, index: jax.Array) -> Tuple[jax.Array, dict]:
+                     cache: dict, index: jax.Array,
+                     tables: Optional[jax.Array] = None
+                     ) -> Tuple[jax.Array, dict]:
     """Single-token decode against a KV cache.
 
-    cache: {"k": (B, S_max, K, hd), "v": ...}; ``index`` is the current
-    position — a scalar (whole batch at the same position, the classic
-    synchronized-decode path) or a (B,) vector of per-slot positions (the
-    continuous-batching path: every slot writes its KV row at its own
-    position and attends under its own causal mask).
+    Dense mode (``tables=None``): cache {"k": (B, S_max, K, hd), "v": ...};
+    ``index`` is the current position — a scalar (whole batch at the same
+    position, the classic synchronized-decode path) or a (B,) vector of
+    per-slot positions (the continuous-batching path: every slot writes
+    its KV row at its own position and attends under its own causal mask).
+
+    Paged mode (``tables`` given): cache is the shared block pool
+    {"k": (num_blocks, block_size, K, hd), "v": ...} and ``tables`` is the
+    (B, blocks_per_slot) int32 block table mapping each slot's logical
+    block index to a physical pool block (entries == num_blocks are
+    unallocated).  Each slot's new KV row scatters into
+    table[pos // bs][pos % bs] (out-of-range physical ids are dropped, so
+    retired slots with invalidated tables write nowhere), and the slot
+    attends over its gathered blocks under the same per-slot causal mask.
     Returns (out (B,1,d), updated cache).
     """
+    if tables is not None:
+        return _paged_decode_attention(p, x, cfg, cache, index, tables)
     B, one, _ = x.shape
     hd = cfg.resolved_head_dim
     H, K = cfg.num_heads, cfg.num_kv_heads
@@ -239,38 +252,88 @@ def decode_attention(p: dict, x: jax.Array, cfg: ModelConfig,
     return out, {"k": k, "v": v}
 
 
-def chunk_attention(p: dict, x: jax.Array, cfg: ModelConfig,
-                    cache: dict, slot: jax.Array, start: jax.Array
-                    ) -> Tuple[jax.Array, dict]:
-    """Multi-token chunk against the slot KV cache (chunked prefill).
+def _paged_decode_attention(p: dict, x: jax.Array, cfg: ModelConfig,
+                            cache: dict, index: jax.Array,
+                            tables: jax.Array) -> Tuple[jax.Array, dict]:
+    """Paged single-token decode: scatter each slot's new KV row through
+    its block table, gather its blocks, attend.  See decode_attention."""
+    B, _, _ = x.shape
+    hd = cfg.resolved_head_dim
+    H, K = cfg.num_heads, cfg.num_kv_heads
+    R = H // K
+    NB, bs = cache["k"].shape[0], cache["k"].shape[1]
+    nb_slot = tables.shape[1]
+    pos = index[:, None].astype(jnp.int32)
+    q, kn, vn = _project_qkv_rope(p, x, cfg, pos)
+    blk = (index // bs).astype(jnp.int32)
+    phys = jnp.take_along_axis(tables, blk[:, None], axis=1)[:, 0]  # (B,)
+    off = (index % bs).astype(jnp.int32)
+    # unallocated/invalidated table entries hold NB: the scatter drops the
+    # write, so an inactive slot's idle decode step mutates nothing — pool
+    # blocks can be freed and reused the moment their refcount hits zero.
+    k = cache["k"].at[phys, off].set(
+        kn[:, 0].astype(cache["k"].dtype), mode="drop")
+    v = cache["v"].at[phys, off].set(
+        vn[:, 0].astype(cache["v"].dtype), mode="drop")
+    k = shard(k, "kv_blocks", None, "kv_heads", None)
+    v = shard(v, "kv_blocks", None, "kv_heads", None)
+    # gather the slot's logical KV row; invalid blocks read as zeros and
+    # sit at positions the per-slot causal mask never exposes
+    kt = jnp.take(k, tables, axis=0, mode="fill", fill_value=0)
+    vt = jnp.take(v, tables, axis=0, mode="fill", fill_value=0)
+    S = nb_slot * bs
+    kt = shard(kt.reshape(B, S, K, hd), "batch", "kv_seq", "kv_heads", None)
+    vt = shard(vt.reshape(B, S, K, hd), "batch", "kv_seq", "kv_heads", None)
+    mask = (jnp.arange(S)[None, :] <= index[:, None]
+            )[:, None, None, None, :]                    # (B,1,1,1,S)
+    qg = q.reshape(B, 1, K, R, hd)
+    o = _gqa_scores_softmax_out(qg, kt, vt, mask, 1.0 / math.sqrt(hd))
+    o = o.reshape(B, 1, H * hd)
+    out = jnp.einsum("bsh,hd->bsd", o, p["wo"])
+    return out, {"k": k, "v": v}
 
-    x: (1, C, d) — one prompt chunk for one slot.  Writes KV rows
-    [start, start + C) of slot ``slot`` into cache {"k": (B, S_max, K, hd),
-    "v": ...}, then attends every chunk query causally against the slot's
-    full cache row, so a chunk at offset ``start`` sees both earlier chunks
-    and any prefix-cache block already inserted below it.  ``slot`` and
-    ``start`` are traced scalars — one compilation serves every offset.
-    Returns (out (1, C, d), updated cache).
+
+def chunk_attention(p: dict, x: jax.Array, cfg: ModelConfig,
+                    cache: dict, table: jax.Array, start: jax.Array
+                    ) -> Tuple[jax.Array, dict]:
+    """Multi-token chunk against the paged slot KV (chunked prefill).
+
+    x: (1, C, d) — one prompt chunk for one slot.  ``cache`` is the shared
+    block pool {"k": (num_blocks, block_size, K, hd), "v": ...} and
+    ``table`` the slot's (blocks_per_slot,) block-table row.  KV rows for
+    absolute positions [start, start + C) scatter into the slot's blocks
+    (rows mapping to unallocated table entries — e.g. tail-chunk zero
+    padding beyond the request's reserved blocks — are dropped), then every
+    chunk query attends causally against the slot's gathered blocks, so a
+    chunk at offset ``start`` sees both earlier chunks and any shared
+    prefix blocks referenced by the table.  ``table`` and ``start`` are
+    traced — one compilation serves every slot and offset.
+    Returns (out (1, C, d), updated pool).
     """
     _, C, _ = x.shape
     hd = cfg.resolved_head_dim
     H, K = cfg.num_heads, cfg.num_kv_heads
     R = H // K
+    NB, bs = cache["k"].shape[0], cache["k"].shape[1]
+    nb_slot = table.shape[0]
     positions = start + jnp.arange(C, dtype=jnp.int32)
     q, kn, vn = _project_qkv_rope(p, x, cfg, positions)
-    k = jax.lax.dynamic_update_slice(
-        cache["k"], kn.astype(cache["k"].dtype), (slot, start, 0, 0))
-    v = jax.lax.dynamic_update_slice(
-        cache["v"], vn.astype(cache["v"].dtype), (slot, start, 0, 0))
-    # same placement pin decode_attention applies: the split-KV layout
-    # from serve_state_pspecs must survive the chunked-prefill update
-    k = shard(k, "batch", "kv_seq", "kv_heads", None)
-    v = shard(v, "batch", "kv_seq", "kv_heads", None)
-    ks = jax.lax.dynamic_slice_in_dim(k, slot, 1, axis=0)   # (1, S_max, ...)
-    vs = jax.lax.dynamic_slice_in_dim(v, slot, 1, axis=0)
-    S = ks.shape[1]
+    phys = jnp.take(table, positions // bs, mode="fill", fill_value=NB)
+    k = cache["k"].at[phys, positions % bs].set(
+        kn[0].astype(cache["k"].dtype), mode="drop")
+    v = cache["v"].at[phys, positions % bs].set(
+        vn[0].astype(cache["v"].dtype), mode="drop")
+    # same placement pin decode applies: the pool layout from
+    # serve_state_pspecs must survive the chunked-prefill update
+    k = shard(k, "kv_blocks", None, "kv_heads", None)
+    v = shard(v, "kv_blocks", None, "kv_heads", None)
+    ks = jnp.take(k, table, axis=0, mode="fill", fill_value=0)
+    vs = jnp.take(v, table, axis=0, mode="fill", fill_value=0)
+    S = nb_slot * bs
+    ks = ks.reshape(1, S, K, hd)
+    vs = vs.reshape(1, S, K, hd)
     # causal over absolute positions: key row j visible to chunk query i
-    # iff j <= start + i (earlier chunks / cached prefix included)
+    # iff j <= start + i (earlier chunks / shared prefix blocks included)
     mask = (jnp.arange(S)[None, :] <= positions[:, None])[None, None, None]
     qg = q.reshape(1, C, K, R, hd)
     o = _gqa_scores_softmax_out(qg, ks, vs, mask, 1.0 / math.sqrt(hd))
@@ -284,6 +347,16 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_seq: int,
     hd = cfg.resolved_head_dim
     K = cfg.num_kv_heads
     z = jnp.zeros((batch, max_seq, K, hd), dtype)
+    return {"k": z, "v": z}
+
+
+def init_paged_kv_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
+                        dtype=jnp.bfloat16) -> dict:
+    """Per-layer paged KV block pool: physical blocks are position-free
+    storage; a slot's block table gives them logical order."""
+    hd = cfg.resolved_head_dim
+    K = cfg.num_kv_heads
+    z = jnp.zeros((num_blocks, block_size, K, hd), dtype)
     return {"k": z, "v": z}
 
 

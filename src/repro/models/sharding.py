@@ -75,6 +75,7 @@ def train_rules(multi_pod: bool, strategy: str = "fsdp_seq",
     dp = ("pod", "data") if multi_pod else ("data",)
     base = {
         "batch": dp, "seq": None, "residual": None, "kv_seq": None,
+        "kv_blocks": None,
         "heads": None, "kv_heads": None, "embed": None, "ff": None,
         "vocab": None, "experts": "model" if expert_parallel else None,
         "expert_cap": None, "ssm_inner": None, "ssm_heads": None,
@@ -116,6 +117,10 @@ def decode_rules(multi_pod: bool, long_context: bool) -> Dict[str, MeshAxes]:
         # batch==1: shard the KV/sequence dim over data AND model.
         r["batch"] = None
         r["kv_seq"] = ("data", "model")
+        r["kv_blocks"] = ("data", "model")
     else:
         r["kv_seq"] = "model"
+        # paged pool: physical blocks are interchangeable, so the block
+        # axis takes the split-KV role the dense cache's seq axis had
+        r["kv_blocks"] = "model"
     return r

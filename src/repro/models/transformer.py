@@ -7,7 +7,9 @@ stacked on a leading L axis so the stack lowers to one lax.scan):
   {"embed": (Vp, d), "head": (d, Vp)|None, "final_norm": (d,), "blocks": ...}
 
 Caches:
-  dense/moe/audio/vlm : {"kv": {"k": (L,B,Smax,K,hd), "v": ...}, "index": ()}
+  dense/moe/audio/vlm : {"kv": {"k": (L,B,Smax,K,hd), "v": ...}} (dense) or
+                        {"kv": {"k": (L,NB,bs,K,hd), "v": ...}} block pool
+                        indexed through per-slot block tables (paged serve)
   ssm (xlstm)         : {"mlstm": <stacked states>, "slstm": <stacked states>}
   hybrid (zamba2)     : {"mamba": <stacked>, "shared_kv": (G,B,Smax,K,hd)x2}
 """
@@ -102,15 +104,16 @@ def _init_blocks(key: jax.Array, cfg: ModelConfig) -> Params:
 
 
 def _dense_block(p_l, x, cfg: ModelConfig, positions, cache_l, index, mode,
-                 slot=None):
+                 tables=None):
     """One attention+FFN (or attention+MoE) block. Returns (x, aux, cache)."""
     h = ly.rms_norm(x, p_l["norm1"], cfg.norm_eps)
     new_cache = None
     if mode == "decode":
-        a, new_cache = ly.decode_attention(p_l["attn"], h, cfg, cache_l, index)
+        a, new_cache = ly.decode_attention(p_l["attn"], h, cfg, cache_l,
+                                           index, tables=tables)
     elif mode == "chunk":
         a, new_cache = ly.chunk_attention(p_l["attn"], h, cfg, cache_l,
-                                          slot, index)
+                                          tables, index)
     else:
         a = ly.causal_attention(p_l["attn"], h, cfg, positions)
         if mode == "prefill":
@@ -137,14 +140,16 @@ def _dense_block(p_l, x, cfg: ModelConfig, positions, cache_l, index, mode,
 def forward(params: Params, x: jax.Array, cfg: ModelConfig,
             mode: str = "train", cache: Optional[dict] = None,
             index: Optional[jax.Array] = None,
-            slot: Optional[jax.Array] = None
+            tables: Optional[jax.Array] = None
             ) -> Tuple[jax.Array, jax.Array, Optional[dict]]:
     """x: embedded inputs (B, S, d).  Returns (hidden, aux_loss, cache).
 
     Modes: "train" / "prefill" (full-sequence), "decode" (single token per
-    slot against the cache), "chunk" (multi-token prompt chunk for slot
-    ``slot`` written into the cache at offset ``index`` — the chunked
-    prefill building block; attention families only).
+    slot against the cache — paged through per-slot block ``tables`` when
+    given, dense otherwise), "chunk" (multi-token prompt chunk written
+    into the paged pool through the slot's (blocks_per_slot,) ``tables``
+    row at offset ``index`` — the chunked prefill building block;
+    attention families only).
     """
     B, S, d = x.shape
     if mode not in ("decode", "chunk"):
@@ -154,7 +159,7 @@ def forward(params: Params, x: jax.Array, cfg: ModelConfig,
     fam = cfg.family
     if fam in ("dense", "audio", "vlm", "moe"):
         y, aux, new_cache = _forward_attn_stack(params, x, cfg, positions,
-                                                mode, cache, index, slot)
+                                                mode, cache, index, tables)
     elif mode == "chunk":
         raise ValueError(f"chunked prefill needs a kv-cache family, "
                          f"got {fam!r}")
@@ -170,7 +175,7 @@ def forward(params: Params, x: jax.Array, cfg: ModelConfig,
 
 
 def _forward_attn_stack(params, x, cfg, positions, mode, cache, index,
-                        slot=None):
+                        tables=None):
     blocks = params["blocks"]
 
     if mode in ("decode", "chunk"):
@@ -178,7 +183,7 @@ def _forward_attn_stack(params, x, cfg, positions, mode, cache, index,
             h, aux = carry
             p_l, c_l = xs
             h, a, nc = _dense_block(p_l, h, cfg, positions, c_l, index, mode,
-                                    slot)
+                                    tables)
             return (h, aux + a), nc
 
         (y, aux), kv = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
@@ -373,13 +378,29 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
     raise ValueError(cfg.family)
 
 
+def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
+                     dtype=jnp.bfloat16) -> dict:
+    """Paged slot cache for attention families: one shared
+    (L, num_blocks, block_size, K, hd) KV block pool; slots reference
+    blocks through their block tables (serve.scheduler.BlockAllocator)."""
+    if cfg.family not in ("dense", "audio", "vlm", "moe"):
+        raise ValueError(f"paged KV needs an attention family, "
+                         f"got {cfg.family!r}")
+    kv = ly.init_paged_kv_cache(cfg, num_blocks, block_size)
+    stack = lambda t: jnp.broadcast_to(t, (cfg.num_layers, *t.shape))
+    return {"kv": jax.tree.map(stack, kv)}
+
+
 def decode_step(params: Params, cache: dict, tokens: jax.Array,
-                index: jax.Array, cfg: ModelConfig
+                index: jax.Array, cfg: ModelConfig,
+                tables: Optional[jax.Array] = None
                 ) -> Tuple[jax.Array, dict]:
-    """tokens: (B, 1) int32.  Returns (logits (B, Vp) f32, new cache)."""
+    """tokens: (B, 1) int32.  Returns (logits (B, Vp) f32, new cache).
+    ``tables``: optional (B, blocks_per_slot) block tables — paged-KV
+    decode for attention families (dense slot cache otherwise)."""
     x = ly.embed_tokens(params["embed"], tokens)
     y, _, new_cache = forward(params, x, cfg, mode="decode", cache=cache,
-                              index=index)
+                              index=index, tables=tables)
     logits = ly.logits_fn(params, y, cfg)[:, 0]
     return logits, new_cache
 
@@ -394,21 +415,24 @@ def prefill(params: Params, batch: dict, cfg: ModelConfig
 
 
 def prefill_chunk(params: Params, cache: dict, tokens: jax.Array,
-                  slot: jax.Array, start: jax.Array, cfg: ModelConfig
+                  table: jax.Array, start: jax.Array, cfg: ModelConfig
                   ) -> dict:
-    """Chunked prefill step: write KV rows [start, start + C) of slot
-    ``slot`` into the slot cache, attending the chunk against everything
-    already cached below it (earlier chunks, prefix-cache blocks).
+    """Chunked prefill step: write KV rows for absolute positions
+    [start, start + C) into the paged pool through the slot's
+    (blocks_per_slot,) block-table row ``table``, attending the chunk
+    against everything the table already references below it (earlier
+    chunks, shared prefix blocks).
 
     tokens: (1, C) int32 — one bucket-sized chunk of one prompt (the tail
-    chunk is zero-padded; junk rows past the prompt sit at positions no
-    query attends before decode rewrites them).  No logits are produced:
-    the scheduler resumes decode at the last prompt position, which
-    recomputes that row's logits in-graph.  ``slot``/``start`` are traced,
-    so one compilation serves every slot and offset — the engine's
-    prefill compile count is 1 regardless of prompt lengths.
+    chunk is zero-padded; pad rows mapping past the request's reserved
+    blocks are dropped by the scatter, the rest sit at positions no query
+    attends before decode rewrites them).  No logits are produced: the
+    scheduler resumes decode at the last prompt position, which recomputes
+    that row's logits in-graph.  ``table``/``start`` are traced, so one
+    compilation serves every slot and offset — the engine's prefill
+    compile count is 1 regardless of prompt lengths.
     """
     x = ly.embed_tokens(params["embed"], tokens)
     _, _, new_cache = forward(params, x, cfg, mode="chunk", cache=cache,
-                              index=start, slot=slot)
+                              index=start, tables=table)
     return new_cache

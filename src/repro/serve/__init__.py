@@ -1,12 +1,14 @@
 """Serving subsystem: continuous batching over fixed per-slot state.
 
 Layering:
-  prefix_cache.py — count-min (CSVec) gated prefix-KV admission under a
-                    hard byte budget
-  scheduler.py    — slot scheduler + the single compiled lax.scan decode
-                    chunk with per-slot position/active/sampling state;
-                    chunked prefill for attention families, slot-inserted
-                    recurrent state for ssm/hybrid
+  prefix_cache.py — count-min (CSVec) gated prefix admission; entries are
+                    refcounted paged-pool block ids under a hard byte
+                    budget (zero-copy prefix sharing)
+  scheduler.py    — slot scheduler + BlockAllocator (paged-KV free list /
+                    refcounts) + the single compiled lax.scan decode
+                    chunk with per-slot position/active/sampling state
+                    and block tables; chunked prefill for attention
+                    families, slot-inserted recurrent state for ssm/hybrid
   engine.py       — ServeEngine facade (batched generate API with
                     per-request temperature/top-k)
 """
@@ -14,12 +16,12 @@ from repro.serve.engine import GenerationResult, ServeEngine
 from repro.serve.prefix_cache import (PrefixCacheStats, SketchPrefixCache,
                                       prefix_key)
 from repro.serve.scheduler import (KV_FAMILIES, RECURRENT_FAMILIES,
-                                   Completion, DecodeState, Request,
-                                   SlotScheduler)
+                                   BlockAllocator, Completion, DecodeState,
+                                   Request, SlotScheduler)
 
 __all__ = [
     "GenerationResult", "ServeEngine",
     "PrefixCacheStats", "SketchPrefixCache", "prefix_key",
-    "KV_FAMILIES", "RECURRENT_FAMILIES", "Completion", "DecodeState",
-    "Request", "SlotScheduler",
+    "KV_FAMILIES", "RECURRENT_FAMILIES", "BlockAllocator", "Completion",
+    "DecodeState", "Request", "SlotScheduler",
 ]

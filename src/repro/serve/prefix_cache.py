@@ -1,4 +1,5 @@
-"""Sketch-gated prefix KV cache: count-min admission over prompt prefixes.
+"""Sketch-gated prefix KV cache: count-min admission over prompt prefixes,
+holding refcounted paged-pool block ids (zero-copy prefix sharing).
 
 Production prompt streams are heavy-tailed — a few system/template prefixes
 recur across millions of requests while the long tail is unique.  Caching
@@ -7,8 +8,8 @@ exact per-prefix frequencies needs state proportional to unique-prompt
 cardinality.  This module uses the same O(table)-storage hash machinery the
 paper builds CS/FCS on (and that HCS motivates for multi-dimensional
 lookups): prefix hashes are counted in a CSVec count-min table
-(sketch/csvec.py, ``signed=False``), and a prefill's KV block is admitted to
-the bounded cache only once its estimated frequency clears
+(sketch/csvec.py, ``signed=False``), and a prefix is admitted to the
+bounded cache only once its estimated frequency clears
 ``admit_threshold``.  Count-min's one-sided overestimate makes admission
 *safe* — a hot prefix is never starved, a cold one is at worst admitted a
 little early — while the tracker stays O(rows * cols) forever.
@@ -20,17 +21,22 @@ preamble both feed the same prefix keys even when their total lengths
 differ.  Admission picks the LONGEST prefix over threshold.  Counts are
 periodically aged (``decay``) TinyLFU-style so stale heavy hitters fade.
 
-Eviction is plain LRU under a hard byte budget — the sketch gates what gets
-*in*, the budget bounds what *stays*.
+Storage: an admitted entry is a tuple of PHYSICAL POOL BLOCK IDS (the
+slot's own prefill blocks, refcounted via the scheduler's BlockAllocator),
+not a host copy — a hit writes the ids into the new slot's block table and
+the prefix KV is shared by reference.  Eviction is LRU under a hard byte
+budget counted in pool blocks, preferring entries no live slot still
+references; an evicted entry's blocks return to the free list only when
+their refcount reaches zero, so in-flight readers are never pulled out
+from under.
 """
 from __future__ import annotations
 
 import hashlib
 from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Any, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
-import jax
 import numpy as np
 
 from repro.configs.base import ServeConfig
@@ -54,8 +60,8 @@ class PrefixCacheStats:
     misses: int = 0
     admitted: int = 0
     evicted: int = 0
-    rejected: int = 0            # observed prefixes still under threshold
-    bytes: int = 0
+    rejected: int = 0            # observed prompts yielding no new admission
+    bytes: int = 0               # unique cache-held pool blocks * block size
 
     @property
     def hit_rate(self) -> float:
@@ -64,48 +70,74 @@ class PrefixCacheStats:
 
 @dataclass
 class _Entry:
-    block: Any                   # np KV pytree, leaves (L, 1, plen, K, hd)
-    nbytes: int
-
-
-def _tree_nbytes(tree: Any) -> int:
-    return sum(int(a.size) * int(a.dtype.itemsize)
-               for a in jax.tree.leaves(tree))
+    plen: int                    # cached prefix length in tokens
+    block_ids: Tuple[int, ...]   # physical pool blocks covering [0, plen)
 
 
 @dataclass
 class SketchPrefixCache:
+    """``allocator`` is the scheduler's BlockAllocator: the cache holds one
+    reference per (entry, block) and the allocator arbitrates frees.
+    ``block_size`` is the paged-KV page size in tokens — admitted prefix
+    lengths are multiples of it (whole shared blocks only: a partially
+    filled block would expose rows another slot later rewrites)."""
     cfg: ServeConfig
+    allocator: Any = None
+    block_size: int = 0
     stats: PrefixCacheStats = field(default_factory=PrefixCacheStats)
 
     def __post_init__(self):
+        # whole-block sharing needs admitted prefix lengths (multiples of
+        # prefix_block) to be block-aligned; assert here so the cache's
+        # own arithmetic may rely on it, not just the scheduler's check
+        assert self.block_size > 0, "paged prefix cache needs a block size"
+        assert self.cfg.prefix_block % self.block_size == 0, (
+            self.cfg.prefix_block, self.block_size)
         self._cm = csvec.csvec_zeros(
             CM_DOMAIN, cols=self.cfg.cm_cols, rows=self.cfg.cm_rows,
             seed=self.cfg.seed, signed=False)
         self._entries: "OrderedDict[Tuple[int, ...], _Entry]" = OrderedDict()
+        self._held: Dict[int, int] = {}      # block id -> # entries holding
         self._observed = 0
 
     # -- read path ---------------------------------------------------------
-    def lookup(self, tokens: np.ndarray, max_suffix: Optional[int] = None
-               ) -> Optional[Tuple[int, Any]]:
-        """Longest cached block-multiple prefix of ``tokens``.  The engine
-        chunk-prefills the remaining suffix at bucket granularity, so any
-        suffix length is serviceable; pass ``max_suffix`` to cap it anyway
-        (legacy forced-decode semantics).  Returns (prefix_len, np KV
-        block) and refreshes LRU recency."""
-        self.stats.lookups += 1
+    def _find(self, tokens: np.ndarray
+              ) -> Optional[Tuple[Tuple[int, ...], _Entry]]:
+        """Longest cached block-multiple prefix (key, entry) of
+        ``tokens``, no side effects."""
         block = self.cfg.prefix_block
         n = len(tokens)
         for m in range(n // block, 0, -1):
-            plen = m * block
-            if max_suffix is not None and n - plen > max_suffix:
-                continue
-            key = tuple(int(t) for t in tokens[:plen])
+            # block-aligned by the __post_init__ divisibility invariant
+            key = tuple(int(t) for t in tokens[:m * block])
             ent = self._entries.get(key)
             if ent is not None:
-                self._entries.move_to_end(key)
-                self.stats.hits += 1
-                return plen, ent.block
+                return key, ent
+        return None
+
+    def peek(self, tokens: np.ndarray
+             ) -> Optional[Tuple[int, Tuple[int, ...]]]:
+        """Like ``lookup`` but WITHOUT touching stats or LRU recency —
+        for retrying a deferred admission (pool pressure): the request
+        was already counted on its first attempt, and counting retries
+        would inflate frequencies/hit rates per scheduler round."""
+        found = self._find(tokens)
+        return None if found is None else (found[1].plen,
+                                           found[1].block_ids)
+
+    def lookup(self, tokens: np.ndarray
+               ) -> Optional[Tuple[int, Tuple[int, ...]]]:
+        """Longest cached block-multiple prefix of ``tokens``.  Returns
+        (prefix_len, pool block ids) and refreshes LRU recency; the caller
+        installs the ids into the slot's block table and takes its own
+        allocator reference (zero-copy hit — no KV rows move)."""
+        self.stats.lookups += 1
+        found = self._find(tokens)
+        if found is not None:
+            key, ent = found
+            self._entries.move_to_end(key)
+            self.stats.hits += 1
+            return ent.plen, ent.block_ids
         self.stats.misses += 1
         return None
 
@@ -129,56 +161,106 @@ class SketchPrefixCache:
             self._cm = csvec.decay(self._cm, self.cfg.cm_decay)
         return counts
 
-    def touch(self, tokens: np.ndarray) -> None:
-        """Count a prompt that was served from the cache.  Hits must keep
-        feeding the frequency sketch (classic TinyLFU counts every
-        access): otherwise a steadily-hit prefix's count freezes, decays
-        toward zero, and after an eventual LRU eviction the hottest
-        prefix in the stream would have to re-earn admission from
-        scratch."""
-        self._count(tokens)
-
     def observe(self, tokens: np.ndarray) -> Optional[int]:
-        """Count an observed (missed) prompt and return the longest
-        prefix length whose estimated frequency clears the admission
-        threshold and is not already cached — the caller should then
-        ``admit`` its KV block.  Returns None when nothing qualifies."""
+        """Count an observed prompt — hits AND misses: classic TinyLFU
+        counts every access, and a hot prompt that keeps hitting a short
+        cached prefix must still be able to get its longer qualifying
+        prefix admitted — and return the longest (kv-block-aligned) prefix
+        length whose estimated frequency clears the admission threshold
+        and is not already cached.  The caller should then ``admit`` the
+        slot's pool blocks covering it.  Returns None (counting the prompt
+        in ``stats.rejected``) when nothing new qualifies."""
         counts = self._count(tokens)
-        if counts is None:
+        if counts is None:           # sub-block prompt: nothing can ever
+            self.stats.rejected += 1  # qualify, but the observation counts
             return None
         block = self.cfg.prefix_block
         n_blocks = len(counts)
         for m in range(n_blocks, 0, -1):
             if counts[m - 1] >= self.cfg.admit_threshold:
-                key = tuple(int(t) for t in tokens[:m * block])
+                plen = m * block     # block-aligned by the init invariant
+                key = tuple(int(t) for t in tokens[:plen])
                 if key not in self._entries:
-                    return m * block
-                return None          # longest qualifying prefix already in
+                    return plen
+                # longest qualifying prefix already cached: nothing to
+                # admit, but the observation still counts as rejected —
+                # otherwise hot-and-cached prompts vanish from the stats
+                break
         self.stats.rejected += 1
         return None
 
-    def admit(self, tokens: np.ndarray, plen: int, kv_block: Any) -> None:
-        """Store the KV block for ``tokens[:plen]`` (host copies, so the
-        byte accounting is exact and entries survive donated device
-        buffers), then evict LRU entries until under budget."""
-        blk = jax.tree.map(lambda a: np.asarray(a), kv_block)
-        nbytes = _tree_nbytes(blk)
-        if nbytes > self.cfg.prefix_cache_bytes:
-            return                   # one block can never fit: don't thrash
+    def admit(self, tokens: np.ndarray, plen: int,
+              block_ids: Tuple[int, ...]) -> None:
+        """Hold a reference on the pool blocks covering ``tokens[:plen]``
+        (zero-copy: they are the admitting slot's own prefill blocks),
+        then evict LRU entries until under the byte budget.  Re-admitting
+        a present key refreshes its LRU recency instead of silently
+        returning — eviction order must reflect real access order."""
+        assert plen % self.block_size == 0, (plen, self.block_size)
+        assert len(block_ids) == plen // self.block_size
         key = tuple(int(t) for t in tokens[:plen])
         if key in self._entries:
+            self._entries.move_to_end(key)
             return
-        self._entries[key] = _Entry(block=blk, nbytes=nbytes)
-        self.stats.bytes += nbytes
+        bb = self.allocator.block_bytes
+        if len(block_ids) * bb > self.cfg.prefix_cache_bytes:
+            return                   # one entry can never fit: don't thrash
+        self.allocator.ref(block_ids)
+        for b in block_ids:
+            self._held[b] = self._held.get(b, 0) + 1
+        self._entries[key] = _Entry(plen=plen, block_ids=tuple(block_ids))
+        self.stats.bytes = len(self._held) * bb
         self.stats.admitted += 1
         while self.stats.bytes > self.cfg.prefix_cache_bytes:
-            _, old = self._entries.popitem(last=False)
-            self.stats.bytes -= old.nbytes
-            self.stats.evicted += 1
+            if not self.evict_one():
+                break
+
+    # -- eviction ----------------------------------------------------------
+    def _entry_busy(self, ent: _Entry) -> bool:
+        """True if any live slot still references the entry's blocks
+        (allocator refcount above the cache's own holds)."""
+        rc = self.allocator.rc
+        return any(int(rc[b]) > self._held.get(b, 0)
+                   for b in ent.block_ids)
+
+    def _remove(self, key: Tuple[int, ...]) -> None:
+        ent = self._entries.pop(key)
+        for b in ent.block_ids:
+            self._held[b] -= 1
+            if self._held[b] == 0:
+                del self._held[b]
+        self.allocator.unref(ent.block_ids)
+        self.stats.bytes = len(self._held) * self.allocator.block_bytes
+        self.stats.evicted += 1
+
+    def evict_one(self, idle_only: bool = False) -> bool:
+        """Evict one entry in LRU order, preferring entries whose blocks
+        no live slot references (those actually free pool blocks).
+        ``idle_only`` stops there — the pool-pressure caller gains
+        nothing from evicting busy entries (their blocks stay reserved by
+        the referencing slots), so wiping hot cached prefixes would be
+        pure loss.  The byte-budget caller falls back to the absolute LRU
+        entry: its blocks return to the free list when the last
+        referencing slot retires, which is what the budget needs.
+        Returns False when nothing (eligible) remains."""
+        if not self._entries:
+            return False
+        for key, ent in self._entries.items():
+            if not self._entry_busy(ent):
+                self._remove(key)
+                return True
+        if idle_only:
+            return False
+        self._remove(next(iter(self._entries)))
+        return True
 
     # -- introspection -----------------------------------------------------
     def __len__(self) -> int:
         return len(self._entries)
+
+    def held_blocks(self) -> int:
+        """Unique pool blocks currently held by the cache."""
+        return len(self._held)
 
     def tracker_bytes(self) -> int:
         """Bytes held by the count-min frequency tracker (O(table),

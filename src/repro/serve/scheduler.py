@@ -1,28 +1,35 @@
-"""Continuous-batching slot scheduler over fixed preallocated per-slot state.
+"""Continuous-batching slot scheduler over preallocated per-slot state.
 
-The engine owns ``max_batch`` slots.  For attention families the slot state
-is one (L, max_batch, max_seq, K, hd) KV cache; for recurrent families
-(ssm / hybrid) it is the family's per-layer recurrent state stacked on the
-same slot axis ((L, max_batch, ...) leaves, plus the hybrid shared-KV
-rows).  Decode runs as ONE jitted function for the engine's lifetime: a
-``jax.lax.scan`` of single-token steps over fixed shapes, with per-slot
-position / active masks and per-slot sampling parameters doing the work
-that used to require per-request shapes.  Requests of arbitrary (mixed)
-prompt lengths, families and sampling settings are admitted into free
-slots between chunks and retired when their token budget is spent; the
-decode step therefore compiles exactly once per engine (see
+The engine owns ``max_batch`` slots.  For attention families the KV cache
+is PAGED: one shared (L, num_kv_blocks, kv_block_size, K, hd) block pool
+plus a per-slot (blocks_per_slot,) int32 block table — a request reserves
+ceil((S + max_new) / kv_block_size) pool blocks from a host-side free-list
+allocator instead of max_seq dense rows, so long-tail requests stop
+reserving sequence capacity they never touch.  For recurrent families
+(ssm / hybrid) the slot state is the family's per-layer recurrent state
+stacked on the slot axis ((L, max_batch, ...) leaves, plus the hybrid
+shared-KV rows), exactly as before.  Decode runs as ONE jitted function
+for the engine's lifetime: a ``jax.lax.scan`` of single-token steps over
+fixed shapes, with per-slot position / active masks, per-slot sampling
+parameters, and (for attention) per-slot block tables doing the work that
+used to require per-request shapes.  Requests of arbitrary (mixed) prompt
+lengths, families and sampling settings are admitted into free slots
+between chunks and retired when their token budget is spent; the decode
+step therefore compiles exactly once per engine (see
 ``decode_compilations``).
 
 Prefill:
 
   * attention families (dense / moe / audio / vlm) use CHUNKED prefill:
     the prompt is fed through ``tf.prefill_chunk`` in ``prefill_bucket``-
-    sized chunks written straight into the slot KV cache, each chunk
-    attending against everything below it.  Chunk starts are aligned to
-    absolute multiples of the bucket, so a prefix-cache hit resuming at
-    ``plen`` replays the same chunk boundaries a cold miss used — the two
-    paths produce bitwise-identical cache rows (the overlap recompute is
-    idempotent) and therefore identical tokens.  Slot and offset are
+    sized chunks scattered through the slot's block table into the pool,
+    each chunk attending against everything below it.  Chunk starts are
+    absolute multiples of the bucket — never clamped — so a prefix-cache
+    hit resuming at ``plen`` replays exactly the chunk boundaries a cold
+    miss used (the overlap recompute is idempotent) and the two paths
+    produce bitwise-identical cache rows and tokens; rows a tail chunk
+    would write past the request's reserved blocks map to the invalid
+    table sentinel and are dropped by the scatter.  Table and offset are
     traced, so prefill compiles exactly once too, for any prompt length.
   * recurrent families prefill the first S-1 prompt tokens exactly (no
     padding — trailing pad tokens would corrupt a recurrence) and insert
@@ -33,15 +40,19 @@ Prefill:
 
 Slot-uniform decode semantics (all shape-static):
 
-  * every slot decodes every step; inactive slots mutate only their own
-    state, which is harmless: KV rows at a position are always rewritten
-    before any query attends there, and recurrent slot state is replaced
-    wholesale at the next admit, so junk is never observed.
+  * every slot decodes every step; inactive slots mutate nothing: a
+    retired slot's block-table row is reset to the invalid sentinel, so
+    its idle KV write is dropped by the scatter — pool blocks are safe to
+    free and reuse the moment their refcount hits zero.  Recurrent slot
+    state is replaced wholesale at the next admit, so junk there is never
+    observed.
   * a freshly admitted attention-family request resumes at
     ``pos = S - 1`` by re-feeding its last prompt token: the recomputed KV
     row is bit-identical (it depends only on that token's residual stream)
     and the resulting logits sample the first output token in-graph —
-    prefill logits never cross the host boundary.
+    prefill logits never cross the host boundary.  When the whole prompt
+    was a cached prefix the rewrite lands in a SHARED block; it is
+    idempotent, so concurrent readers of that block see unchanged bits.
   * sampling is per-slot: temperature / top-k / PRNG key live in (B,)
     engine state set at admission, so greedy and sampled requests (and
     different seeds) share the one compiled chunk.  A greedy slot's tokens
@@ -49,13 +60,16 @@ Slot-uniform decode semantics (all shape-static):
 
 Prefix reuse (attention families only — a recurrent state at a prefix
 boundary is not recoverable from an end-of-prompt prefill) is gated by the
-count-min admission filter in serve/prefix_cache.py.
+count-min admission filter in serve/prefix_cache.py and is ZERO-COPY: a
+hit writes the cached entry's physical block ids into the new slot's
+table and bumps their refcounts; no KV rows move.  Admission donates the
+admitting slot's own prefill blocks to the cache the same way.
 """
 from __future__ import annotations
 
 import functools
 from dataclasses import dataclass
-from typing import Any, Dict, List, NamedTuple, Optional
+from typing import Any, Dict, List, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -92,10 +106,66 @@ class Completion:
     prefix_hit: bool
 
 
+class BlockAllocator:
+    """Host-side free-list allocator over the paged KV block pool.
+
+    Every pool block has a refcount: 1 for the slot that allocated it,
+    +1 per prefix-cache entry holding it, +1 per additional slot sharing
+    it through a prefix hit.  A block returns to the free list exactly
+    when its count reaches zero — zero-copy sharing with no
+    use-after-free, no matter how admission, hits and evictions
+    interleave.  ``peak_reserved`` records the high-water mark of
+    allocated blocks (the paged analogue of the dense cache's
+    max_batch * max_seq reservation).
+    """
+
+    def __init__(self, num_blocks: int, block_bytes: int):
+        self.num_blocks = num_blocks
+        self.block_bytes = block_bytes
+        self._free = list(range(num_blocks - 1, -1, -1))   # pop() -> 0,1,..
+        self.rc = np.zeros((num_blocks,), np.int64)
+        self.peak_reserved = 0
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def reserved(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Take ``n`` blocks (refcount 1 each); None if not enough free."""
+        if n > len(self._free):
+            return None
+        ids = [self._free.pop() for _ in range(n)]
+        self.rc[ids] += 1
+        self.peak_reserved = max(self.peak_reserved, self.reserved)
+        return ids
+
+    def ref(self, ids: Sequence[int]) -> None:
+        for b in ids:
+            self.rc[b] += 1
+
+    def unref(self, ids: Sequence[int]) -> None:
+        for b in ids:
+            self.rc[b] -= 1
+            assert self.rc[b] >= 0, f"block {b} over-unreffed"
+            if self.rc[b] == 0:
+                self._free.append(b)
+
+    def reserved_bytes(self) -> int:
+        return self.reserved * self.block_bytes
+
+    def peak_reserved_bytes(self) -> int:
+        return self.peak_reserved * self.block_bytes
+
+
 class DecodeState(NamedTuple):
     """All device-resident engine state (a pytree; see
     launch.shardings.serve_state_pspecs for its mesh placement)."""
-    cache: Dict[str, Any]        # family slot state, leaves (L|G, B, ...)
+    cache: Dict[str, Any]        # KV block pool / recurrent slot state
+    tables: jax.Array            # (B, blocks_per_slot) int32 block tables
     cur: jax.Array               # (B, 1) next token to feed per slot
     pos: jax.Array               # (B,)  write/attend position per slot
     remaining: jax.Array         # (B,)  output tokens still owed per slot
@@ -117,19 +187,55 @@ class SlotScheduler:
         self.is_kv = cfg.family in KV_FAMILIES
         sv = self.serve
         B = sv.max_batch
-        # prefix reuse is a KV-cache concept; a recurrent scheduler gets
-        # no idle count-min table (and misuse fails loudly on None)
-        self.prefix_cache = SketchPrefixCache(sv) if self.is_kv else None
         self._queue: List[Request] = []
         self._slot_req: List[Optional[Request]] = [None] * B
         self._slot_out: List[List[int]] = [[] for _ in range(B)]
         self._slot_hit: List[bool] = [False] * B
+        self._slot_blocks: List[List[int]] = [[] for _ in range(B)]
+        # rid -> pending admit_plen: set on a request's FIRST admission
+        # attempt so pool-pressure retries don't re-feed the count-min
+        # tracker (a queued one-shot prompt must not accrue one count per
+        # scheduler round and spuriously cross admit_threshold)
+        self._admit_memo: Dict[int, Optional[int]] = {}
+        self._slot_rows: List[int] = [0] * B
+        self._used_rows = 0
+        self.peak_used_rows = 0
         self.decode_steps = 0
         self.completed: List[Completion] = []
         self._base_key = jax.random.PRNGKey(sv.seed)
 
+        if self.is_kv:
+            # no max_seq clamp: a block larger than max_seq just means one
+            # partially-used block per slot, while clamping could
+            # manufacture a size that breaks the divisibility contract
+            self.block_size = max(1, sv.kv_block_size)
+            assert sv.prefix_block % self.block_size == 0, (
+                f"kv_block_size {self.block_size} must divide prefix_block "
+                f"{sv.prefix_block} so cached prefixes share whole blocks")
+            self.blocks_per_slot = -(-sv.max_seq // self.block_size)
+            nb = sv.num_kv_blocks or B * self.blocks_per_slot
+            self.num_blocks = nb
+            cache = tf.init_paged_cache(cfg, nb, self.block_size)
+            pool_bytes = sum(int(a.size) * int(a.dtype.itemsize)
+                             for a in jax.tree.leaves(cache))
+            self.alloc = BlockAllocator(nb, pool_bytes // nb)
+            self.prefix_cache = SketchPrefixCache(
+                sv, allocator=self.alloc, block_size=self.block_size)
+            tables0 = jnp.full((B, self.blocks_per_slot), nb, jnp.int32)
+        else:
+            # prefix reuse / paging are KV-cache concepts; a recurrent
+            # scheduler gets neither (and misuse fails loudly on None)
+            self.block_size = 0
+            self.blocks_per_slot = 0
+            self.num_blocks = 0
+            self.alloc = None
+            self.prefix_cache = None
+            cache = tf.init_cache(cfg, B, sv.max_seq)
+            tables0 = jnp.zeros((B, 0), jnp.int32)
+
         self._state = DecodeState(
-            cache=tf.init_cache(cfg, B, sv.max_seq),
+            cache=cache,
+            tables=tables0,
             cur=jnp.zeros((B, 1), jnp.int32),
             pos=jnp.zeros((B,), jnp.int32),
             remaining=jnp.zeros((B,), jnp.int32),
@@ -138,12 +244,13 @@ class SlotScheduler:
             keys=jnp.zeros((B, 2), jnp.uint32),
         )
         self._chunk_fn = jax.jit(self._make_chunk(), donate_argnums=(1,))
-        self._insert_fn = jax.jit(self._insert_state, donate_argnums=(0,))
         if self.is_kv:
             self._prefill_chunk = jax.jit(
                 functools.partial(tf.prefill_chunk, cfg=cfg),
                 donate_argnums=(1,))
         else:
+            self._insert_fn = jax.jit(self._insert_state,
+                                      donate_argnums=(0,))
             self._prefill = jax.jit(functools.partial(tf.prefill, cfg=cfg))
             # slot "reset" block: zero state inserted before (or instead
             # of, for 1-token prompts) the prefilled state
@@ -156,6 +263,7 @@ class SlotScheduler:
     def _make_chunk(self):
         cfg = self.cfg
         chunk = self.serve.decode_chunk
+        is_kv = self.is_kv
 
         def sample(key, lg, temp, top_k):
             """Per-slot next token: greedy when temp == 0, else top-k
@@ -190,11 +298,15 @@ class SlotScheduler:
 
         def chunk_fn(params, state: DecodeState):
             temp, top_k = state.temp, state.top_k
+            # block tables are fixed for the chunk (admission happens
+            # between chunks on the host), so they ride outside the carry
+            tables = state.tables if is_kv else None
 
             def step(carry, _):
                 cache, cur, pos, remaining, keys = carry
                 running = remaining > 0
-                logits, cache = tf.decode_step(params, cache, cur, pos, cfg)
+                logits, cache = tf.decode_step(params, cache, cur, pos, cfg,
+                                               tables=tables)
                 lg = logits[:, :cfg.vocab_size].astype(jnp.float32)
                 keys, nxt = sample(keys, lg, temp, top_k)
                 nxt = nxt.astype(jnp.int32)
@@ -207,20 +319,20 @@ class SlotScheduler:
                      state.keys)
             (cache, cur, pos, remaining, keys), (toks, emits) = \
                 jax.lax.scan(step, carry, None, length=chunk)
-            new_state = DecodeState(cache=cache, cur=cur, pos=pos,
-                                    remaining=remaining, temp=temp,
-                                    top_k=top_k, keys=keys)
+            new_state = DecodeState(cache=cache, tables=state.tables,
+                                    cur=cur, pos=pos, remaining=remaining,
+                                    temp=temp, top_k=top_k, keys=keys)
             return new_state, toks, emits        # toks/emits: (chunk, B)
 
         return chunk_fn
 
     @staticmethod
     def _insert_state(cache, block, slot):
-        """Write a per-request prefill block (leaves (X, 1, ...)) into slot
-        ``slot`` of the preallocated slot state (leaves (X, B, ...)):
-        KV-block leaves land at sequence offset 0, equal-shape recurrent
-        leaves are replaced wholesale — the slot 'reset' that makes any
-        stale state from the slot's previous occupant unobservable."""
+        """Write a per-request recurrent prefill block (leaves (X, 1, ...))
+        into slot ``slot`` of the preallocated slot state (leaves
+        (X, B, ...)): equal-shape leaves are replaced wholesale — the slot
+        'reset' that makes any stale state from the slot's previous
+        occupant unobservable."""
         def one(c, b):
             return jax.lax.dynamic_update_slice(
                 c, b.astype(c.dtype), (0, slot) + (0,) * (c.ndim - 2))
@@ -239,11 +351,23 @@ class SlotScheduler:
         assert S + req.max_new <= sv.max_seq, (
             f"prompt {S} + max_new {req.max_new} exceeds max_seq "
             f"{sv.max_seq}")
+        if self.is_kv:
+            # reject up front what the pool can never serve — otherwise
+            # the impossible request head-of-line-blocks the FIFO queue
+            # and only fails once every in-flight slot has drained
+            need = -(-(S + req.max_new) // self.block_size)
+            assert need <= self.num_blocks, (
+                f"request needs {need} KV blocks of {self.block_size}, "
+                f"pool has {self.num_blocks} (raise "
+                f"cfg.serve.num_kv_blocks)")
         self._queue.append(req)
 
     def reseed(self, key: jax.Array) -> None:
         """Replace the base sampling key: per-slot keys for requests
-        without an explicit seed derive from it (folded with the rid)."""
+        without an explicit seed derive from it (folded with the rid).
+        Only NOT-YET-ADMITTED requests are affected — in-flight slots
+        keep the keys they were admitted with (per-slot keys are engine
+        state, resolved once at admission)."""
         self._base_key = key
 
     def _request_key(self, req: Request) -> jax.Array:
@@ -253,14 +377,15 @@ class SlotScheduler:
             return jax.random.PRNGKey(req.seed)
         return jax.random.fold_in(self._base_key, req.rid)
 
-    def _chunk_prefill_loop(self, cache, prompt: np.ndarray, slot: int,
-                            start_off: int):
+    def _chunk_prefill_loop(self, cache, prompt: np.ndarray,
+                            table: jax.Array, start_off: int):
         """Feed prompt rows [start_off, S) through bucket-sized prefill
-        chunks.  Starts are aligned to absolute bucket multiples (and the
-        tail chunk is clamped into [0, max_seq - bucket]), so the chunk
-        boundaries — and hence the cache rows — are identical whether the
-        loop starts at 0 (cold miss) or at a cached-prefix boundary (hit);
-        overlap rows recompute to the same values they already hold."""
+        chunks.  Starts are ALWAYS absolute bucket multiples — no tail
+        clamp — so the chunk boundaries (and hence the cache rows) are
+        identical whether the loop starts at 0 (cold miss) or at a cached-
+        prefix boundary (hit), for any max_seq; overlap rows recompute to
+        the values they already hold, and tail rows mapping past the
+        request's reserved blocks are dropped by the paged scatter."""
         sv = self.serve
         S = len(prompt)
         if start_off >= S:
@@ -268,40 +393,93 @@ class SlotScheduler:
         bucket = max(1, min(sv.prefill_bucket, sv.max_seq))
         off = (start_off // bucket) * bucket
         while off < S:
-            start = min(off, sv.max_seq - bucket)
-            seg = prompt[start:start + bucket]
+            seg = prompt[off:off + bucket]
             tok = np.zeros((1, bucket), np.int32)
             tok[0, :len(seg)] = seg
             cache = self._prefill_chunk(self.params, cache,
-                                        jnp.asarray(tok), jnp.int32(slot),
-                                        jnp.int32(start))
+                                        jnp.asarray(tok), table,
+                                        jnp.int32(off))
             off += bucket
         return cache
 
-    def _admit(self, slot: int, req: Request) -> None:
+    def _take_blocks(self, n: int) -> Optional[List[int]]:
+        """Allocate ``n`` pool blocks, evicting IDLE prefix-cache entries
+        under pressure (evicting busy ones frees nothing — their blocks
+        stay reserved by the referencing slots — so hot prefixes are
+        never wiped for a transient spike); None when the pool genuinely
+        can't serve it now."""
+        ids = self.alloc.alloc(n)
+        while ids is None and self.prefix_cache.evict_one(idle_only=True):
+            ids = self.alloc.alloc(n)
+        return ids
+
+    def _admit(self, slot: int, req: Request) -> bool:
+        """Try to admit ``req`` into ``slot``; False when the block pool
+        can't currently reserve the request's KV (the caller leaves the
+        request queued until blocks free up)."""
         prompt = np.asarray(req.tokens, np.int32)
         S = len(prompt)
         st = self._state
         hit = None
         if self.is_kv:
-            hit = self.prefix_cache.lookup(prompt)
-            admit_plen = None
-            if hit is not None:
-                plen, block_np = hit
-                self.prefix_cache.touch(prompt)  # hits keep counts fresh
-                block = jax.tree.map(jnp.asarray, block_np)
-                cache = self._insert_fn(st.cache, {"kv": block},
-                                        jnp.int32(slot))
-                start_off = plen
+            bs = self.block_size
+            if req.rid not in self._admit_memo:
+                hit = self.prefix_cache.lookup(prompt)
+                # hits feed the admission path too: a hot prompt that
+                # keeps hitting a short cached prefix must still get its
+                # longer qualifying prefix admitted eventually
+                self._admit_memo[req.rid] = self.prefix_cache.observe(
+                    prompt)
             else:
-                admit_plen = self.prefix_cache.observe(prompt)
-                cache, start_off = st.cache, 0
-            cache = self._chunk_prefill_loop(cache, prompt, slot, start_off)
+                # pool-pressure retry: the request was counted on its
+                # first attempt — re-resolve the hit statelessly (the
+                # entry may have been evicted or admitted meanwhile, so
+                # stats reflect the first attempt while Completion.
+                # prefix_hit reflects how the request was actually
+                # served) and reuse the memoized admission decision
+                hit = self.prefix_cache.peek(prompt)
+            admit_plen = self._admit_memo[req.rid]
+            shared: List[int] = []
+            start_off = 0
+            if hit is not None:
+                plen, ids = hit
+                shared = list(ids)
+                start_off = plen
+                # pin the shared blocks BEFORE any allocation below can
+                # pressure the cache into evicting (and freeing) them
+                self.alloc.ref(shared)
+            if admit_plen is not None and admit_plen <= start_off:
+                admit_plen = None    # nothing beyond what we already share
+            n_total = -(-(S + req.max_new) // bs)
+            new_ids = self._take_blocks(n_total - len(shared))
+            if new_ids is None:
+                if hit is not None:
+                    self.alloc.unref(shared)
+                if not any(r is not None for r in self._slot_req):
+                    raise RuntimeError(
+                        f"kv pool ({self.num_blocks} blocks of {bs}) too "
+                        f"small for prompt {S} + max_new {req.max_new}")
+                return False
+            slot_ids = shared + new_ids
+            self._slot_blocks[slot] = slot_ids
+            # used-rows tracks DEMAND: every row a live request attends,
+            # shared prefix rows counted per referencing request — so
+            # demand exceeding reserved is the zero-copy sharing win
+            # made visible, not an accounting error
+            self._slot_rows[slot] = S + req.max_new
+            self._used_rows += self._slot_rows[slot]
+            self.peak_used_rows = max(self.peak_used_rows, self._used_rows)
+            row = np.full((self.blocks_per_slot,), self.num_blocks,
+                          np.int32)
+            row[:len(slot_ids)] = slot_ids
+            table = jnp.asarray(row)
+            st = st._replace(tables=st.tables.at[slot].set(table))
+            cache = self._chunk_prefill_loop(st.cache, prompt, table,
+                                             start_off)
             if admit_plen is not None:
-                blk = jax.tree.map(
-                    lambda a: np.asarray(a[:, slot:slot + 1, :admit_plen]),
-                    cache["kv"])
-                self.prefix_cache.admit(prompt, admit_plen, blk)
+                self.prefix_cache.admit(prompt, admit_plen,
+                                        tuple(slot_ids[:admit_plen // bs]))
+            self._admit_memo.pop(req.rid, None)
         else:
             # recurrent: exact-length prefill of all but the last token
             # (decode applies it — a recurrent step is not idempotent, so
@@ -327,10 +505,12 @@ class SlotScheduler:
         self._slot_req[slot] = req
         self._slot_out[slot] = []
         self._slot_hit[slot] = hit is not None
+        return True
 
     def _retire(self) -> List[Completion]:
         done: List[Completion] = []
         remaining = np.asarray(self._state.remaining)
+        freed = []
         for s, req in enumerate(self._slot_req):
             if req is not None and remaining[s] == 0:
                 done.append(Completion(
@@ -340,6 +520,21 @@ class SlotScheduler:
                     prefix_hit=self._slot_hit[s]))
                 self._slot_req[s] = None
                 self._slot_out[s] = []
+                if self.is_kv:
+                    freed.append(s)
+        if freed:
+            # invalidate retired slots' table rows BEFORE their blocks can
+            # be freed/reused: an idle slot still executes the decode
+            # write every step, and only the sentinel makes it a no-op
+            # (one batched row-scatter, not one update per slot)
+            tables = self._state.tables.at[np.asarray(freed)].set(
+                self.num_blocks)
+            self._state = self._state._replace(tables=tables)
+            for s in freed:
+                self.alloc.unref(self._slot_blocks[s])
+                self._slot_blocks[s] = []
+                self._used_rows -= self._slot_rows[s]
+                self._slot_rows[s] = 0
         self.completed.extend(done)
         return done
 
@@ -351,12 +546,15 @@ class SlotScheduler:
             r is not None for r in self._slot_req)
 
     def step(self) -> List[Completion]:
-        """One scheduler round: admit queued requests into free slots, run
-        one compiled decode chunk, collect emitted tokens, retire finished
+        """One scheduler round: admit queued requests into free slots
+        (requests the block pool can't serve yet stay queued), run one
+        compiled decode chunk, collect emitted tokens, retire finished
         requests.  Returns the requests completed this round."""
         for s in range(self.serve.max_batch):
             if self._slot_req[s] is None and self._queue:
-                self._admit(s, self._queue.pop(0))
+                if not self._admit(s, self._queue[0]):
+                    break            # pool pressure: wait for retirements
+                self._queue.pop(0)
         if not any(r is not None for r in self._slot_req):
             return []
         self._state, toks, emits = self._chunk_fn(self.params, self._state)
@@ -405,5 +603,40 @@ class SlotScheduler:
         return self._state
 
     def kv_cache_bytes(self) -> int:
+        """Total bytes of the slot cache (the whole pool for attention
+        families, the stacked recurrent state otherwise)."""
         return sum(int(a.size) * int(a.dtype.itemsize)
                    for a in jax.tree.leaves(self._state.cache))
+
+    def kv_reserved_bytes(self) -> int:
+        """Bytes of pool blocks currently allocated (slots + prefix
+        cache) — what the engine actually reserves, vs the dense
+        max_batch * max_seq equivalent."""
+        return self.alloc.reserved_bytes() if self.is_kv else \
+            self.kv_cache_bytes()
+
+    def kv_peak_reserved_bytes(self) -> int:
+        """High-water mark of reserved pool bytes over the engine's
+        lifetime (the honest paged analogue of the dense reservation)."""
+        return self.alloc.peak_reserved_bytes() if self.is_kv else \
+            self.kv_cache_bytes()
+
+    def kv_peak_used_bytes(self) -> int:
+        """High-water mark of the KV row DEMAND of concurrently live
+        requests ((S + max_new) per active slot; rows of a shared prefix
+        count once per referencing request).  Reserved minus demand,
+        when positive, bounds internal fragmentation (< one block per
+        slot) plus idle cached prefixes; demand ABOVE reserved is memory
+        zero-copy prefix sharing deduplicated away."""
+        if not self.is_kv:
+            return self.kv_cache_bytes()
+        row_bytes = self.alloc.block_bytes / self.block_size
+        return int(row_bytes * self.peak_used_rows)
+
+    def kv_dense_equiv_bytes(self) -> int:
+        """Bytes the old dense (L, max_batch, max_seq, K, hd) slot cache
+        would have reserved for the same engine geometry."""
+        if not self.is_kv:
+            return self.kv_cache_bytes()
+        row_bytes = self.alloc.block_bytes / self.block_size
+        return int(row_bytes * self.serve.max_seq * self.serve.max_batch)

@@ -122,12 +122,14 @@ def test_chunked_prefill_hit_matches_miss_multi_bucket(gemma):
 
 
 def test_prefix_cache_respects_byte_budget(gemma):
-    """LRU eviction keeps cached KV bytes at or under the configured
-    budget no matter how many prefixes qualify for admission."""
+    """LRU eviction keeps cache-held pool-block bytes at or under the
+    configured budget no matter how many prefixes qualify for admission,
+    and the refcount books balance: once every slot has retired, the only
+    reserved pool blocks are the ones the prefix cache holds."""
     cfg, params = gemma
     serve = dataclasses.replace(cfg.serve, max_batch=2, max_seq=96,
                                 prefill_bucket=16, prefix_block=16,
-                                admit_threshold=1,
+                                kv_block_size=16, admit_threshold=1,
                                 prefix_cache_bytes=6 * 1024)
     sched = SlotScheduler(cfg, params, serve=serve)
     rng = np.random.RandomState(2)
@@ -138,9 +140,12 @@ def test_prefix_cache_respects_byte_budget(gemma):
     assert st.admitted >= 2
     assert st.evicted >= 1
     assert st.bytes <= serve.prefix_cache_bytes
-    # recompute from entries agrees with the running counter
-    live = sum(e.nbytes for e in sched.prefix_cache._entries.values())
-    assert live == st.bytes
+    # byte counter == unique held blocks, and allocator agrees: with all
+    # slots retired, reserved pool blocks are exactly the cache's holds
+    held = sched.prefix_cache.held_blocks()
+    assert st.bytes == held * sched.alloc.block_bytes
+    assert sched.alloc.reserved == held
+    assert sched.alloc.free_count == sched.num_blocks - held
 
 
 def test_exact_length_prefill_still_hits(gemma):
@@ -150,7 +155,7 @@ def test_exact_length_prefill_still_hits(gemma):
     cfg, params = gemma
     serve = dataclasses.replace(cfg.serve, max_batch=2, max_seq=96,
                                 prefill_bucket=1, prefix_block=8,
-                                admit_threshold=2)
+                                kv_block_size=8, admit_threshold=2)
     sched = SlotScheduler(cfg, params, serve=serve)
     rng = np.random.RandomState(3)
     prompt = rng.randint(0, cfg.vocab_size, (13,)).astype(np.int32)
@@ -292,8 +297,9 @@ def test_countmin_decay_ages_counts():
 
 @pytest.mark.parametrize("arch", ["gemma-2b", "xlstm-1.3b"])
 def test_serve_state_pspecs(arch):
-    """Slot-state decode specs: kv leaves split-KV over model on the seq
-    axis (attention) / recurrent leaves per cache_pspecs, per-slot
+    """Slot-state decode specs: the paged KV pool's block axis takes the
+    split-KV role over model (blocks are interchangeable) with block
+    tables replicated; recurrent leaves per cache_pspecs; per-slot
     bookkeeping and sampling state on the batch axis."""
     from jax.sharding import PartitionSpec as P
 
@@ -308,13 +314,304 @@ def test_serve_state_pspecs(arch):
     specs = serve_state_pspecs(cfg, sched.state, rules)
     b = rules["batch"]
     if arch == "gemma-2b":
-        assert specs.cache["kv"]["k"] == P(None, b, "model", None, None)
+        # pool (L, NB, bs, K, hd): block axis split-KV over model
+        assert specs.cache["kv"]["k"] == P(None, "model", None, None, None)
+        assert specs.tables == P(None, None)
     else:
         assert specs.cache["mlstm"]["C"][1] == b
+        assert specs.tables == P(b, None)
     assert specs.pos == P(b)
     assert specs.temp == P(b)
     assert specs.top_k == P(b)
     assert specs.keys == P(b, None)
+
+
+def test_paged_pool_reserves_blocks_not_max_seq(gemma):
+    """The paged-KV contract: a request reserves ceil((S + max_new) /
+    kv_block_size) pool blocks, not max_seq dense rows — short requests
+    in a big-max_seq engine cut reserved KV bytes by >= 4x — and every
+    block returns to the free list once its slot retires."""
+    cfg, params = gemma
+    serve = dataclasses.replace(cfg.serve, max_batch=4, max_seq=256,
+                                prefill_bucket=16, kv_block_size=16,
+                                admit_threshold=100)   # no admission noise
+    sched = SlotScheduler(cfg, params, serve=serve)
+    rng = np.random.RandomState(6)
+    reqs = [Request(rid=i,
+                    tokens=rng.randint(0, cfg.vocab_size,
+                                       (12 + i,)).astype(np.int32),
+                    max_new=4)
+            for i in range(8)]
+    done = sched.run(list(reqs))
+    assert len(done) == 8
+    assert sched.kv_peak_reserved_bytes() * 4 <= sched.kv_dense_equiv_bytes()
+    assert sched.alloc.reserved == 0          # all blocks back on the list
+    assert sched.alloc.free_count == sched.num_blocks
+    assert sched.decode_compilations == 1
+
+
+def test_pool_pressure_defers_admission(gemma):
+    """A pool smaller than max_batch's worth of requests must defer
+    admissions until retirements free blocks — never corrupt KV or drop
+    requests: everything completes and matches the oracle."""
+    cfg, params = gemma
+    serve = dataclasses.replace(cfg.serve, max_batch=4, max_seq=64,
+                                prefill_bucket=16, kv_block_size=16,
+                                num_kv_blocks=4, admit_threshold=100)
+    sched = SlotScheduler(cfg, params, serve=serve)
+    rng = np.random.RandomState(7)
+    # each request needs 2 of the 4 pool blocks: at most 2 in flight
+    reqs = [Request(rid=i,
+                    tokens=rng.randint(0, cfg.vocab_size,
+                                       (20,)).astype(np.int32),
+                    max_new=4)
+            for i in range(4)]
+    done = {c.rid: c for c in sched.run(list(reqs))}
+    assert len(done) == 4
+    for r in reqs:
+        ref = _oracle_continuation(cfg, params, r.tokens, r.max_new)
+        np.testing.assert_array_equal(done[r.rid].tokens, ref,
+                                      err_msg=f"rid {r.rid}")
+    assert sched.alloc.peak_reserved <= 4
+    assert sched.alloc.reserved == 0
+    assert sched.decode_compilations == 1
+    # a request the pool can NEVER serve is rejected at submit time —
+    # not left to head-of-line-block the queue and crash mid-stream
+    small = dataclasses.replace(serve, num_kv_blocks=2)
+    s2 = SlotScheduler(cfg, params, serve=small)
+    with pytest.raises(AssertionError, match="KV blocks"):
+        s2.submit(Request(rid=99,
+                          tokens=rng.randint(0, cfg.vocab_size,
+                                             (36,)).astype(np.int32),
+                          max_new=4))                # 3 blocks > pool 2
+
+
+def test_deferred_admission_counts_request_once(gemma):
+    """A request stuck behind pool pressure is retried every scheduler
+    round, but must feed the count-min tracker (and lookup stats) exactly
+    ONCE — otherwise a one-shot prompt accrues one count per retry,
+    spuriously crosses admit_threshold, and a cold prefix evicts real
+    heavy hitters."""
+    cfg, params = gemma
+    serve = dataclasses.replace(cfg.serve, max_batch=2, max_seq=64,
+                                prefill_bucket=16, prefix_block=16,
+                                kv_block_size=16, num_kv_blocks=3,
+                                admit_threshold=2)
+    sched = SlotScheduler(cfg, params, serve=serve)
+    rng = np.random.RandomState(13)
+    # A occupies 2 of 3 blocks for 2 decode chunks; B (2 blocks) must wait
+    a = Request(rid=0, tokens=rng.randint(0, cfg.vocab_size,
+                                          (20,)).astype(np.int32),
+                max_new=12)
+    b = Request(rid=1, tokens=rng.randint(0, cfg.vocab_size,
+                                          (20,)).astype(np.int32),
+                max_new=4)
+    done = sched.run([a, b])
+    assert len(done) == 2
+    st = sched.prefix_cache.stats
+    assert st.lookups == 2, "retries re-counted lookups"
+    # B was observed once: its 16-token prefix has count 1 < threshold 2,
+    # so nothing may have been admitted off the back of retry inflation
+    assert len(sched.prefix_cache) == 0
+    assert st.admitted == 0
+
+
+def test_pool_pressure_never_wipes_busy_entries(gemma):
+    """Pool-pressure eviction must stop at entries whose blocks live
+    slots still reference: removing them frees nothing (the blocks stay
+    reserved), so a transient spike must not wipe hot cached prefixes."""
+    cfg, params = gemma
+    serve = dataclasses.replace(cfg.serve, max_batch=2, max_seq=64,
+                                prefill_bucket=16, prefix_block=16,
+                                kv_block_size=16, num_kv_blocks=4,
+                                admit_threshold=1)
+    sched = SlotScheduler(cfg, params, serve=serve)
+    rng = np.random.RandomState(14)
+    pre = rng.randint(0, cfg.vocab_size, (16,)).astype(np.int32)
+    # admit the prefix (threshold 1), slot retires, cache holds 1 block
+    sched.run([Request(rid=0, tokens=pre, max_new=4)])
+    assert len(sched.prefix_cache) == 1
+    # B shares the cached block and holds the pool for 2 decode chunks;
+    # C (2 blocks, 1 free) must defer — and must NOT evict B's busy entry
+    b = Request(rid=1,
+                tokens=np.concatenate(
+                    [pre, rng.randint(0, cfg.vocab_size,
+                                      (16,)).astype(np.int32)]),
+                max_new=12)
+    c = Request(rid=2, tokens=rng.randint(0, cfg.vocab_size,
+                                          (16,)).astype(np.int32),
+                max_new=4)
+    done = {x.rid: x for x in sched.run([b, c])}
+    assert len(done) == 2 and done[1].prefix_hit
+    assert tuple(int(t) for t in pre) in sched.prefix_cache._entries, (
+        "pool pressure wiped a busy (still-referenced) cache entry")
+    for r in (b, c):
+        np.testing.assert_array_equal(
+            done[r.rid].tokens,
+            _oracle_continuation(cfg, params, r.tokens, r.max_new))
+
+
+def test_prefix_hit_is_zero_copy(gemma):
+    """A prefix-cache hit installs the cached entry's PHYSICAL block ids
+    into the slot's table (no KV rows move) and bumps their refcount;
+    slot retirement releases the reference, the cache keeps its own."""
+    cfg, params = gemma
+    serve = dataclasses.replace(cfg.serve, max_batch=2, max_seq=96,
+                                prefill_bucket=16, prefix_block=16,
+                                kv_block_size=16, admit_threshold=2)
+    sched = SlotScheduler(cfg, params, serve=serve)
+    rng = np.random.RandomState(8)
+    prompt = rng.randint(0, cfg.vocab_size, (32,)).astype(np.int32)
+    for i in range(2):
+        sched.run([Request(rid=i, tokens=prompt, max_new=4)])
+    # threshold 2: the LONGEST qualifying prefix (the full 32-token
+    # prompt, 2 blocks) is admitted on the second observation
+    key = tuple(int(t) for t in prompt)
+    ids = sched.prefix_cache._entries[key].block_ids
+    assert len(ids) == 2
+    assert int(sched.alloc.rc[ids[0]]) == 1           # cache hold only
+    # third request hits; keep it in flight to observe the shared ref
+    sched.submit(Request(rid=2, tokens=prompt, max_new=12))
+    done = sched.step()                               # decode_chunk=8 < 12
+    assert not done and sched._slot_hit[0]
+    assert sched._slot_blocks[0][0] == ids[0]         # shared by reference
+    assert int(sched.alloc.rc[ids[0]]) == 2           # cache + slot
+    out = sched.run()
+    assert len(out) == 1 and out[0].prefix_hit
+    assert int(sched.alloc.rc[ids[0]]) == 1           # slot ref released
+
+
+def test_hit_extends_cached_prefix(gemma):
+    """Regression (hot prompt starved of its long prefix): hits feed the
+    admission path too, so a prompt that keeps hitting a short cached
+    prefix eventually gets its LONGEST block-multiple prefix admitted and
+    served — with outputs bitwise-stable throughout."""
+    cfg, params = gemma
+    serve = dataclasses.replace(cfg.serve, max_batch=2, max_seq=96,
+                                prefill_bucket=16, prefix_block=16,
+                                kv_block_size=16, admit_threshold=2)
+    sched = SlotScheduler(cfg, params, serve=serve)
+    rng = np.random.RandomState(9)
+    pre = rng.randint(0, cfg.vocab_size, (16,)).astype(np.int32)
+    # two different-tailed prompts get the SHORT 16-token prefix admitted
+    for i in range(2):
+        tail = rng.randint(0, cfg.vocab_size, (8,)).astype(np.int32)
+        sched.run([Request(rid=i, tokens=np.concatenate([pre, tail]),
+                           max_new=3)])
+    assert tuple(int(t) for t in pre) in sched.prefix_cache._entries
+    # now a hot prompt whose longest prefix (its full 48 tokens) only
+    # accrues count-min frequency through HITS on the short prefix
+    prompt = np.concatenate([pre, rng.randint(0, cfg.vocab_size,
+                                              (32,)).astype(np.int32)])
+    outs = [sched.run([Request(rid=10 + i, tokens=prompt, max_new=4)])[0]
+            for i in range(4)]
+    assert outs[1].prefix_hit
+    long_key = tuple(int(t) for t in prompt)          # 48 = 3 blocks
+    assert long_key in sched.prefix_cache._entries, (
+        "hit path never extended the cached prefix")
+    # the last run serves the full-prompt prefix (plen == S: decode
+    # resumes inside a shared block — idempotent rewrite) bitwise-equal
+    for o in outs[1:]:
+        np.testing.assert_array_equal(o.tokens, outs[0].tokens)
+    np.testing.assert_array_equal(
+        outs[0].tokens, _oracle_continuation(cfg, params, prompt, 4))
+
+
+def test_chunk_prefill_hit_matches_miss_nondividing_max_seq(gemma):
+    """Regression for the tail clamp: with prefill_bucket not dividing
+    max_seq, chunk starts must stay absolute bucket multiples on both the
+    cold-miss and the cached-prefix-hit paths (the old clamp shifted the
+    tail chunk to max_seq - bucket), keeping hit == miss bitwise."""
+    cfg, params = gemma
+    serve = dataclasses.replace(cfg.serve, max_batch=2, max_seq=88,
+                                prefill_bucket=32, prefix_block=16,
+                                kv_block_size=16, admit_threshold=2)
+    assert serve.max_seq % serve.prefill_bucket != 0
+    sched = SlotScheduler(cfg, params, serve=serve)
+    rng = np.random.RandomState(11)
+    # prompt reaches into the non-dividing tail: S=80 > max_seq - bucket
+    prompt = rng.randint(0, cfg.vocab_size, (80,)).astype(np.int32)
+    outs = [sched.run([Request(rid=i, tokens=prompt, max_new=6)])[0]
+            for i in range(4)]
+    assert outs[-1].prefix_hit and not outs[0].prefix_hit
+    for o in outs[1:]:
+        np.testing.assert_array_equal(o.tokens, outs[0].tokens)
+    np.testing.assert_array_equal(
+        outs[0].tokens, _oracle_continuation(cfg, params, prompt, 6))
+    assert sched.decode_compilations == 1
+    assert sched.prefill_compilations == 1
+
+
+def test_prefix_cache_lru_refresh_and_rejected_stats():
+    """Satellite regressions on SketchPrefixCache bookkeeping: (a)
+    re-admitting a present key refreshes LRU recency (the old early
+    return left eviction order stale); (b) observe() counts a prompt
+    whose longest qualifying prefix is already cached in stats.rejected
+    instead of silently returning None."""
+    import dataclasses as dc
+
+    from repro.configs.base import ServeConfig
+    from repro.serve.prefix_cache import SketchPrefixCache
+    from repro.serve.scheduler import BlockAllocator
+
+    sv = dc.replace(ServeConfig(), prefix_block=4, admit_threshold=1,
+                    prefix_cache_bytes=128)            # 2 x 64-byte blocks
+    alloc = BlockAllocator(num_blocks=8, block_bytes=64)
+    cache = SketchPrefixCache(sv, allocator=alloc, block_size=4)
+    a = np.arange(0, 4, dtype=np.int32)
+    b = np.arange(4, 8, dtype=np.int32)
+    c = np.arange(8, 12, dtype=np.int32)
+    ids = {}
+    for name, toks in (("a", a), ("b", b)):
+        blk = alloc.alloc(1)
+        cache.admit(toks, 4, tuple(blk))
+        alloc.unref(blk)                               # "slot" retires
+        ids[name] = blk[0]
+    cache.admit(a, 4, (ids["a"],))                     # refresh, not no-op
+    blk = alloc.alloc(1)
+    cache.admit(c, 4, tuple(blk))                      # over budget: evict
+    alloc.unref(blk)
+    assert cache.stats.evicted == 1
+    assert cache.lookup(a) is not None, "refreshed entry was evicted"
+    assert cache.lookup(b) is None, "stale-LRU entry survived"
+    # rc books: evicted b's block went back to the free list
+    assert int(alloc.rc[ids["b"]]) == 0
+    # (b): longest qualifying prefix cached -> rejected must count it
+    rej0 = cache.stats.rejected
+    assert cache.observe(a) is None
+    assert cache.stats.rejected == rej0 + 1
+
+
+def test_reseed_only_affects_unadmitted(gemma):
+    """SlotScheduler.reseed(): in-flight slots keep the sampling keys
+    they were admitted with (per-slot keys are engine state resolved at
+    admission); requests admitted AFTER a reseed derive from the new base
+    key, reproducibly across schedulers."""
+    cfg, params = gemma
+    serve = dataclasses.replace(cfg.serve, max_batch=2, max_seq=64,
+                                decode_chunk=2)
+    rng = np.random.RandomState(12)
+    prompt = rng.randint(0, cfg.vocab_size, (8,)).astype(np.int32)
+
+    def mk(rid):
+        return Request(rid=rid, tokens=prompt.copy(), max_new=6,
+                       temperature=0.9)                # base-key derived
+
+    ctrl = SlotScheduler(cfg, params, serve=serve).run([mk(0)])[0]
+    s2 = SlotScheduler(cfg, params, serve=serve)
+    s2.submit(mk(0))
+    done = s2.step()                                   # in flight (2 of 6)
+    assert not done
+    s2.reseed(jax.random.PRNGKey(999))                 # mid-flight reseed
+    out = s2.run()[0]
+    np.testing.assert_array_equal(out.tokens, ctrl.tokens)
+    # post-reseed requests are reproducible: same reseed key + same rid
+    # on a fresh scheduler gives the same sampled stream
+    s3 = SlotScheduler(cfg, params, serve=serve)
+    s3.reseed(jax.random.PRNGKey(999))
+    r2 = s2.run([mk(7)])[0]
+    r3 = s3.run([mk(7)])[0]
+    np.testing.assert_array_equal(r2.tokens, r3.tokens)
 
 
 def test_rtpm_nan_safe_selection():
