@@ -14,14 +14,12 @@ sketched with the SAME per-mode hashes (J_n per mode) and the logits are
 from __future__ import annotations
 
 import argparse
-import functools
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, timeit
 from repro.core import fcs_sketch_len, make_tensor_hashes
-from repro.core.hashes import combined_fcs_hash
 from repro.core.sketches import fcs_general, ts_general
 
 FEAT = (7, 7, 32)

@@ -94,7 +94,7 @@ def main() -> None:
             # prefill_hit row really times the multi-bucket chunked path
             bench_serve.run(archs=("gemma-2b", "xlstm-1.3b"),
                             n_requests=8, max_new=4, max_batch=2,
-                            hit_suffix=40)
+                            hit_suffix=40, spec_max_new=32)
     else:
         if want("rtpm"):
             bench_rtpm.run()

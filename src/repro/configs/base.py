@@ -93,6 +93,21 @@ class ServeConfig:
     regardless of unique-prompt cardinality).
     ``cm_decay_every``/``cm_decay``: every N observed prompts the counts
     are aged by the decay factor so stale prefixes lose admission priority.
+    ``spec_k``: speculative decoding (attention families): a cheap draft
+    model proposes up to ``spec_k`` tokens per slot per round and the
+    served model verifies all of them in ONE multi-query decode step
+    (``transformer.verify_step``); greedy speculative output is
+    token-for-token identical to plain greedy decode.  0 (default)
+    disables speculation and keeps the classic one-token decode chunk.
+    Per-request ``Request.spec_k`` overrides, clamped to this engine max.
+    ``draft_depth``: layers of the served stack kept in the derived draft
+    proposer (``models/draft.py:make_draft`` — a truncated prefix of the
+    block stack sharing embed/norm/head).
+    ``draft_sketch_ratio``: > 0 additionally count-sketch-compresses the
+    draft's block weights along their contraction dim at this ratio and
+    swaps the draft's LM head for the FCS-sketched head (paper Section
+    4.2 machinery) at the same ratio — the paper's compressed-forward
+    recipe applied to drafting.  0 keeps the truncated weights dense.
     """
 
     max_batch: int = 8
@@ -109,6 +124,9 @@ class ServeConfig:
     cm_decay_every: int = 1024
     cm_decay: float = 0.5
     seed: int = 0
+    spec_k: int = 0
+    draft_depth: int = 1
+    draft_sketch_ratio: int = 0
 
 
 # ---------------------------------------------------------------------------

@@ -24,7 +24,7 @@ from typing import Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.count_sketch import cs_apply, cs_apply_cols
+from repro.core.count_sketch import cs_apply_cols
 from repro.core.hashes import ModeHash, fcs_sketch_len
 
 

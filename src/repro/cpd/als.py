@@ -14,8 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (
-    ModeHash, cs_apply, fcs_general, fcs_tiuu, make_tensor_hashes,
-    ts_general, ts_tiuu,
+    ModeHash, cs_apply, fcs_general, make_tensor_hashes, ts_general,
 )
 
 

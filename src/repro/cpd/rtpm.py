@@ -11,7 +11,6 @@ experiments); ``rtpm_asymmetric`` does alternating rank-1 updates
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable, Optional, Sequence, Tuple
 
 import jax
@@ -21,8 +20,6 @@ from repro.core import (
     ModeHash, cs_apply, fcs_general, fcs_tiuu, fcs_tuuu, hcs_general,
     make_tensor_hashes, ts_general, ts_tiuu, ts_tuuu,
 )
-from repro.core.hashes import combined_fcs_hash, fcs_sketch_len
-from repro.core.sketches import hcs_decompress_entry
 
 
 # ---------------------------------------------------------------------------

@@ -16,10 +16,8 @@ import argparse
 import json
 import time
 import traceback
-from typing import Optional
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import SHAPES, SHAPE_BY_NAME, shape_applicable
@@ -73,9 +71,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                     specs["batch"]))
                 if sketch_grads:
                     from repro.train.grad_compress import (
-                        init_error_feedback, make_compressed_train_step,
-                        make_podwise_compressed_step)
-                    # NOTE: make_podwise_compressed_step (shard_map over
+                        init_error_feedback, make_compressed_train_step)
+                    # NOTE: grad_compress.make_podwise_compressed_step
+                    # (shard_map over
                     # "pod") pins the sketch-only DCN placement but trips an
                     # XLA:CPU crash ("Invalid binary instruction opcode
                     # copy"); the global form is mathematically identical

@@ -21,7 +21,6 @@ Groups spanning > pod_size devices are attributed to DCN, else ICI.
 """
 from __future__ import annotations
 
-import math
 import re
 from typing import Dict, List, Optional, Tuple
 

@@ -10,8 +10,11 @@ admission filter has real heavy hitters to find.  Every family rides the
 slot scheduler — attention families through chunked prefill + the prefix
 cache, recurrent families (ssm/hybrid) through slot-inserted state.  Part
 of the stream can be sampled (``--sampled-frac``) to exercise mixed
-greedy/sampled decoding in the one compiled chunk.  Runs on the reduced
-config by default; pass ``--full`` for the full architecture.
+greedy/sampled decoding in the one compiled chunk, and ``--spec-k`` turns
+on speculative decoding (a truncated / count-sketch-compressed draft
+proposes, the target verifies in one multi-query step; acceptance rate
+and mean accepted-run length are reported).  Runs on the reduced config
+by default; pass ``--full`` for the full architecture.
 """
 from __future__ import annotations
 
@@ -71,6 +74,14 @@ def main():
                     help="temperature for the sampled fraction")
     ap.add_argument("--top-k", type=int, default=8,
                     help="top-k cutoff for the sampled fraction")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative draft tokens per verify round "
+                         "(0 = plain decode; attention families only)")
+    ap.add_argument("--draft-depth", type=int, default=1,
+                    help="layers kept in the derived draft proposer")
+    ap.add_argument("--draft-sketch-ratio", type=int, default=0,
+                    help="count-sketch-compress the draft weights at this "
+                         "ratio (0 = dense truncated draft)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--full", action="store_true",
                     help="run the full architecture (default: reduced)")
@@ -84,7 +95,12 @@ def main():
     params = M.init_params(k_params, cfg)
     serve = dataclasses.replace(
         cfg.serve, max_batch=args.max_batch, max_seq=args.max_seq,
-        admit_threshold=args.admit_threshold, prefix_block=args.prefix_len)
+        admit_threshold=args.admit_threshold, prefix_block=args.prefix_len,
+        spec_k=args.spec_k, draft_depth=args.draft_depth,
+        draft_sketch_ratio=args.draft_sketch_ratio)
+    if args.spec_k and cfg.family not in KV_FAMILIES:
+        print(f"note: --spec-k needs an attention family; {cfg.family!r} "
+              f"decodes plainly")
     sched = SlotScheduler(cfg, params, serve=serve)
     reqs = make_request_stream(cfg, np.random.RandomState(args.seed + 1),
                                args.requests, args.prefixes,
@@ -103,6 +119,14 @@ def main():
     print(f"decode compilations: {sched.decode_compilations} "
           f"(steps: {sched.decode_steps}), "
           f"prefill compilations: {sched.prefill_compilations}")
+    if sched.spec_max:
+        print(f"speculative: spec_k={sched.spec_max} "
+              f"draft_depth={sched.draft.cfg.num_layers} "
+              f"(sketch_ratio={serve.draft_sketch_ratio}), "
+              f"acceptance_rate={sched.acceptance_rate:.2f} "
+              f"({sched.spec_accepted}/{sched.spec_proposed} proposals), "
+              f"mean_accepted_run={sched.mean_accepted_run:.2f} "
+              f"tokens/round over {sched.spec_rounds} rounds")
     if cfg.family in KV_FAMILIES:
         st = sched.prefix_cache.stats
         print(f"prefix cache: hit_rate={st.hit_rate:.2f} "

@@ -298,8 +298,14 @@ def serve_state_pspecs(cfg: ModelConfig, state: Any,
     paged = state.tables.shape[-1] > 0
     if paged:
         kb = rules.get("kv_blocks")
-        cache_specs = {"kv": jax.tree.map(
-            lambda a: P(None, kb, None, None, None), state.cache["kv"])}
+        pool = lambda sub: jax.tree.map(
+            lambda a: P(None, kb, None, None, None), sub)
+        cache_specs = {"kv": pool(state.cache["kv"])}
+        if "draft" in state.cache:
+            # the speculative draft's shallow pool shares the target
+            # pool's block geometry (same tables, same allocator), so it
+            # takes the same split-KV block-axis placement
+            cache_specs["draft"] = {"kv": pool(state.cache["draft"]["kv"])}
         tables = P(None, None)
     else:
         cache_specs = cache_pspecs(cfg, state.cache, rules)
@@ -313,4 +319,16 @@ def serve_state_pspecs(cfg: ModelConfig, state: Any,
         temp=slot(state.temp),
         top_k=slot(state.top_k),
         keys=slot(state.keys),
+        spec_k=slot(state.spec_k),
     )
+
+
+def draft_param_pspecs(draft, rules: Dict[str, MeshAxes]) -> Any:
+    """PartitionSpecs for a speculative draft's parameter tree
+    (models/draft.py:Draft): weight-stationary TP on the decode mesh,
+    exactly like the served params — the draft is a plain (truncated /
+    count-sketch-compressed) params tree, so the name-based TP map
+    applies unchanged.  The FCS-sketched draft head (J, padded_vocab)
+    shards its vocab dim over "model" with the small sketch dim
+    replicated, matching the dense head's placement."""
+    return build_param_pspecs(draft.cfg, draft.params, rules, "tp")

@@ -1,0 +1,179 @@
+"""Draft-model derivation for speculative decoding.
+
+The serve engine's speculative path needs a proposer that is much cheaper
+than the served model but agrees with it often enough that verified
+acceptance runs are long.  Two derivations, composable:
+
+  * truncation (``draft_depth``): the draft keeps the FIRST ``depth``
+    layers of the served block stack (the per-layer leaves are stacked on
+    a leading L axis, so truncation is one slice per leaf) and shares the
+    embedding, final norm and LM head.  Early layers carry most of the
+    next-token signal, so a shallow prefix is the classic cheap draft.
+
+  * count-sketch compression (``draft_sketch_ratio`` > 0): every block
+    matmul weight is replaced by its count-sketch reconstruction along
+    the CONTRACTION dim — W ~= median_r S_r^T S_r W with the O(1)-storage
+    hash family from ``sketch/hashing.py`` — and the LM head is swapped
+    for the FCS-sketched head of ``models/layers.py`` (paper Section 4.2:
+    activations are count-sketched per token, the projection lives in the
+    J-dim sketch space).  This is the paper's compressed-forward recipe
+    (HCS / tensor-regression compression, arXiv:1901.11261) applied to
+    drafting: the sketch preserves enough of the operator that the
+    compressed forward pass is a usable approximation, not just an
+    estimator.
+
+Either way the draft is a plain params tree + ModelConfig that runs
+through the unchanged ``transformer`` decode/prefill paths — the
+scheduler treats it as just another attention-family model with its own
+(shallow) paged KV pool riding the same block tables as the target.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ServeConfig
+from repro.models import layers as ly
+from repro.sketch import hashing
+
+ATTENTION_FAMILIES = ("dense", "moe", "audio", "vlm")
+
+
+class Draft(NamedTuple):
+    """A derived proposer: params + the config that interprets them."""
+    params: Any
+    cfg: ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Truncation
+# ---------------------------------------------------------------------------
+
+
+def truncate_params(params: Any, cfg: ModelConfig, depth: int):
+    """Shallow draft: the first ``depth`` layers of the block stack with
+    shared embed / final norm / head.  Returns (draft_params, draft_cfg).
+    Attention families only — recurrent stacks interleave block types in
+    grouped patterns that a leading-axis slice would scramble."""
+    if cfg.family not in ATTENTION_FAMILIES:
+        raise ValueError(f"draft truncation needs an attention family, "
+                         f"got {cfg.family!r}")
+    depth = int(depth)
+    if not 1 <= depth <= cfg.num_layers:
+        raise ValueError(f"draft_depth {depth} outside [1, {cfg.num_layers}]")
+    blocks = jax.tree.map(lambda a: a[:depth], params["blocks"])
+    dcfg = dataclasses.replace(cfg, num_layers=depth)
+    return {**params, "blocks": blocks}, dcfg
+
+
+# ---------------------------------------------------------------------------
+# Count-sketch weight compression
+# ---------------------------------------------------------------------------
+
+
+def _cs_reconstruct(w: jax.Array, ratio: int, rows: int,
+                    seed: int) -> jax.Array:
+    """Count-sketch a (d_in, d_out) matrix along d_in (the contraction
+    dim) into J = d_in // ratio buckets and reconstruct: the median over
+    ``rows`` independent hash rows of S_r^T (S_r W).  Unbiased per
+    element; collisions inject zero-mean noise that shrinks with J."""
+    d_in = w.shape[0]
+    J = max(1, d_in // max(1, ratio))
+    if J >= d_in:
+        return w
+    coeffs = hashing.cached_coeffs(seed, rows)
+    idx = jnp.arange(d_in, dtype=jnp.int32)
+    bk, sg = hashing.row_buckets_signs(coeffs, idx, J, signed=True)
+    wf = w.astype(jnp.float32)
+    est = []
+    for r in range(rows):
+        table = jnp.zeros((J, wf.shape[1]), jnp.float32
+                          ).at[bk[r]].add(sg[r][:, None] * wf)
+        est.append(sg[r][:, None] * table[bk[r]])
+    return jnp.median(jnp.stack(est), axis=0).astype(w.dtype)
+
+
+def _compress_leaf(path, w: jax.Array, ratio: int, rows: int,
+                   base_seed: int) -> jax.Array:
+    """Compress one stacked block leaf (..., d_in, d_out) along its
+    contraction (second-to-last) axis; 1D leaves (norms, biases, per-head
+    scalars) pass through untouched."""
+    if w.ndim < 3:          # (L, d) norms / (L, h) biases: nothing to sketch
+        return w
+    shp = w.shape
+    lead = int(np.prod(shp[:-2]))
+    wf = w.reshape(lead, shp[-2], shp[-1])
+    # a distinct, process-salt-free hash seed per (leaf, slice):
+    # correlated collision patterns across layers would bias every layer
+    # the same way, and the derivation must be reproducible across runs
+    name = "/".join(str(getattr(k, "key", k)) for k in path)
+    leaf_seed = (base_seed * 1_000_003
+                 + zlib.crc32(name.encode())) & 0x7FFFFFFF
+    out = [_cs_reconstruct(wf[i], ratio, rows, leaf_seed + i)
+           for i in range(lead)]
+    return jnp.stack(out).reshape(shp)
+
+
+def sketch_head(params: Any, cfg: ModelConfig, J: int,
+                seed: int) -> jax.Array:
+    """Derive the (J, padded_vocab) FCS-sketched head from the dense head
+    (or the tied embedding): head_sk = (one_hot(h) * sg)^T W, the exact
+    counterpart of the activation sketch ``layers._head_io`` applies, so
+    logits ~= x W with CR = d_model / J."""
+    W = (params["head"] if params.get("head") is not None
+         else params["embed"].T)
+    h, sg = ly._head_hash_tables(seed, cfg.d_model, J)
+    onehot = (jax.nn.one_hot(jnp.asarray(h), J, dtype=jnp.float32)
+              * jnp.asarray(sg)[:, None])                 # (d, J)
+    return jnp.einsum("dj,dv->jv", onehot,
+                      W.astype(jnp.float32)).astype(ly.PDTYPE)
+
+
+def compress_params(params: Any, cfg: ModelConfig, depth: int,
+                    ratio: int, rows: int = 3,
+                    seed: Optional[int] = None):
+    """FCS/count-sketch-compressed draft: truncate to ``depth`` layers,
+    reconstruct every block matmul weight through a ratio-J count sketch,
+    and replace the LM head with the sketched head at the same ratio.
+    Returns (draft_params, draft_cfg); ``ratio <= 1`` degenerates to pure
+    truncation (dense weights, dense head)."""
+    dparams, dcfg = truncate_params(params, cfg, depth)
+    if ratio <= 1:
+        return dparams, dcfg
+    seed = cfg.sketch.seed if seed is None else seed
+    dparams = dict(dparams)
+    dparams["blocks"] = jax.tree_util.tree_map_with_path(
+        lambda p, w: _compress_leaf(p, w, ratio, rows, seed),
+        dparams["blocks"])
+    J = max(1, cfg.d_model // ratio)
+    dparams["head"] = sketch_head(params, cfg, J, seed)
+    dcfg = dataclasses.replace(
+        dcfg, tie_embeddings=False,
+        sketch=dataclasses.replace(cfg.sketch, sketched_head=True,
+                                   head_hash_len=J, seed=seed))
+    return dparams, dcfg
+
+
+# ---------------------------------------------------------------------------
+# Entry point
+# ---------------------------------------------------------------------------
+
+
+def make_draft(params: Any, cfg: ModelConfig,
+               serve: Optional[ServeConfig] = None) -> Optional[Draft]:
+    """Build the draft the serve config asks for: None when speculation
+    is off (``spec_k == 0``) or the family has no KV cache to verify
+    against; otherwise a ``draft_depth``-layer truncation, additionally
+    count-sketch-compressed when ``draft_sketch_ratio > 0``."""
+    sv = serve if serve is not None else cfg.serve
+    if sv.spec_k <= 0 or cfg.family not in ATTENTION_FAMILIES:
+        return None
+    depth = min(max(1, sv.draft_depth), cfg.num_layers)
+    dparams, dcfg = compress_params(params, cfg, depth,
+                                    sv.draft_sketch_ratio)
+    return Draft(params=dparams, cfg=dcfg)

@@ -293,6 +293,59 @@ def _paged_decode_attention(p: dict, x: jax.Array, cfg: ModelConfig,
     return out, {"k": k, "v": v}
 
 
+def verify_attention(p: dict, x: jax.Array, cfg: ModelConfig,
+                     cache: dict, index: jax.Array, tables: jax.Array
+                     ) -> Tuple[jax.Array, dict]:
+    """Multi-query paged decode (speculative verify).
+
+    x: (B, C, d) — every slot feeds C tokens (its last committed token
+    followed by C-1 draft proposals) at absolute positions
+    index[b] .. index[b] + C - 1.  Structurally this is ``chunk_attention``
+    batched over slots: each slot's C new KV rows scatter through its own
+    block-table row (out-of-range or invalidated physical ids drop, so
+    retired slots and overhang rows mutate nothing), then each of its C
+    queries attends causally — key row j visible to query i iff
+    j <= index[b] + i — over the slot's gathered blocks.  The per-row
+    projections and masks match single-token paged decode exactly, so a
+    verified-and-accepted position produces the same logits a plain
+    decode step at that position would.  Returns (out (B, C, d), pool).
+    """
+    B, C, _ = x.shape
+    hd = cfg.resolved_head_dim
+    H, K = cfg.num_heads, cfg.num_kv_heads
+    R = H // K
+    NB, bs = cache["k"].shape[0], cache["k"].shape[1]
+    nb_slot = tables.shape[1]
+    positions = (index[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+                 ).astype(jnp.int32)                     # (B, C)
+    q, kn, vn = _project_qkv_rope(p, x, cfg, positions)
+    blk = positions // bs
+    phys = jnp.take_along_axis(tables, jnp.minimum(blk, nb_slot - 1),
+                               axis=1)
+    # rows past the slot's table (speculative overhang at max_seq) must
+    # DROP, not clamp into the last reserved block
+    phys = jnp.where(blk < nb_slot, phys, NB)
+    off = positions % bs
+    k = cache["k"].at[phys, off].set(
+        kn.astype(cache["k"].dtype), mode="drop")
+    v = cache["v"].at[phys, off].set(
+        vn.astype(cache["v"].dtype), mode="drop")
+    k = shard(k, "kv_blocks", None, "kv_heads", None)
+    v = shard(v, "kv_blocks", None, "kv_heads", None)
+    kt = jnp.take(k, tables, axis=0, mode="fill", fill_value=0)
+    vt = jnp.take(v, tables, axis=0, mode="fill", fill_value=0)
+    S = nb_slot * bs
+    kt = shard(kt.reshape(B, S, K, hd), "batch", "kv_seq", "kv_heads", None)
+    vt = shard(vt.reshape(B, S, K, hd), "batch", "kv_seq", "kv_heads", None)
+    mask = (jnp.arange(S)[None, None, :] <= positions[:, :, None]
+            )[:, None, None]                             # (B,1,1,C,S)
+    qg = q.reshape(B, C, K, R, hd)
+    o = _gqa_scores_softmax_out(qg, kt, vt, mask, 1.0 / math.sqrt(hd))
+    o = o.reshape(B, C, H * hd)
+    out = jnp.einsum("bsh,hd->bsd", o, p["wo"])
+    return out, {"k": k, "v": v}
+
+
 def chunk_attention(p: dict, x: jax.Array, cfg: ModelConfig,
                     cache: dict, table: jax.Array, start: jax.Array
                     ) -> Tuple[jax.Array, dict]:

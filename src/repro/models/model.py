@@ -8,7 +8,7 @@ embeddings (the modality frontend is a stub per the assignment).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

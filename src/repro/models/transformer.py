@@ -111,6 +111,9 @@ def _dense_block(p_l, x, cfg: ModelConfig, positions, cache_l, index, mode,
     if mode == "decode":
         a, new_cache = ly.decode_attention(p_l["attn"], h, cfg, cache_l,
                                            index, tables=tables)
+    elif mode == "verify":
+        a, new_cache = ly.verify_attention(p_l["attn"], h, cfg, cache_l,
+                                           index, tables)
     elif mode == "chunk":
         a, new_cache = ly.chunk_attention(p_l["attn"], h, cfg, cache_l,
                                           tables, index)
@@ -149,19 +152,25 @@ def forward(params: Params, x: jax.Array, cfg: ModelConfig,
     given, dense otherwise), "chunk" (multi-token prompt chunk written
     into the paged pool through the slot's (blocks_per_slot,) ``tables``
     row at offset ``index`` — the chunked prefill building block;
-    attention families only).
+    attention families only), "verify" (speculative decode: every slot
+    feeds S tokens at per-slot start positions ``index`` ((B,)) through
+    its block-table row — multi-query paged decode; attention families
+    only).
     """
     B, S, d = x.shape
-    if mode not in ("decode", "chunk"):
+    if mode not in ("decode", "chunk", "verify"):
         x = shard(x, "batch", "residual", None)
-    positions = (jnp.arange(S) if index is None
-                 else jnp.arange(S) + index)
+    if mode == "verify":
+        positions = None     # per-slot (B,) starts; handled in-layer
+    else:
+        positions = (jnp.arange(S) if index is None
+                     else jnp.arange(S) + index)
     fam = cfg.family
     if fam in ("dense", "audio", "vlm", "moe"):
         y, aux, new_cache = _forward_attn_stack(params, x, cfg, positions,
                                                 mode, cache, index, tables)
-    elif mode == "chunk":
-        raise ValueError(f"chunked prefill needs a kv-cache family, "
+    elif mode in ("chunk", "verify"):
+        raise ValueError(f"mode {mode!r} needs a kv-cache family, "
                          f"got {fam!r}")
     elif fam == "ssm":
         y, aux, new_cache = _forward_xlstm(params, x, cfg, mode, cache)
@@ -178,7 +187,7 @@ def _forward_attn_stack(params, x, cfg, positions, mode, cache, index,
                         tables=None):
     blocks = params["blocks"]
 
-    if mode in ("decode", "chunk"):
+    if mode in ("decode", "chunk", "verify"):
         def body(carry, xs):
             h, aux = carry
             p_l, c_l = xs
@@ -402,6 +411,30 @@ def decode_step(params: Params, cache: dict, tokens: jax.Array,
     y, _, new_cache = forward(params, x, cfg, mode="decode", cache=cache,
                               index=index, tables=tables)
     logits = ly.logits_fn(params, y, cfg)[:, 0]
+    return logits, new_cache
+
+
+def verify_step(params: Params, cache: dict, tokens: jax.Array,
+                index: jax.Array, cfg: ModelConfig, tables: jax.Array
+                ) -> Tuple[jax.Array, dict]:
+    """Speculative-decode verification: score C tokens per slot in ONE
+    compiled multi-query decode against the paged pool.
+
+    tokens: (B, C) int32 — each slot's last committed token followed by
+    its C-1 draft proposals; index: (B,) per-slot start positions (the
+    slot's current decode position).  Rows for positions
+    index[b] .. index[b]+C-1 scatter through the slot's block table
+    exactly as C successive decode steps would, and the returned logits
+    (B, C, Vp) f32 at position index[b]+i match what a plain decode step
+    would produce after committing tokens[:i+1] — the property that makes
+    greedy speculative decode bitwise-identical to plain greedy decode.
+    Rejected rows beyond the accepted prefix are overwritten by the next
+    round's writes before any query can attend them.
+    """
+    x = ly.embed_tokens(params["embed"], tokens)
+    y, _, new_cache = forward(params, x, cfg, mode="verify", cache=cache,
+                              index=index, tables=tables)
+    logits = ly.logits_fn(params, y, cfg)
     return logits, new_cache
 
 

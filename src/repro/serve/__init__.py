@@ -5,12 +5,17 @@ Layering:
                     refcounted paged-pool block ids under a hard byte
                     budget (zero-copy prefix sharing)
   scheduler.py    — slot scheduler + BlockAllocator (paged-KV free list /
-                    refcounts) + the single compiled lax.scan decode
-                    chunk with per-slot position/active/sampling state
-                    and block tables; chunked prefill for attention
-                    families, slot-inserted recurrent state for ssm/hybrid
+                    refcounts / copy-on-write forks) + the single
+                    compiled lax.scan decode chunk with per-slot
+                    position/active/sampling/spec_k state and block
+                    tables; chunked prefill for attention families,
+                    slot-inserted recurrent state for ssm/hybrid
+  speculative.py  — the speculative decode chunk (serve.spec_k > 0):
+                    draft-propose (models/draft.py derived proposer) /
+                    verify-all (transformer.verify_step) / commit-
+                    accepted rounds, greedy-identical to plain decode
   engine.py       — ServeEngine facade (batched generate API with
-                    per-request temperature/top-k)
+                    per-request temperature/top-k/spec_k)
 """
 from repro.serve.engine import GenerationResult, ServeEngine
 from repro.serve.prefix_cache import (PrefixCacheStats, SketchPrefixCache,

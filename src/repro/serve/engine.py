@@ -16,6 +16,13 @@ Sampling is per-request: ``temperature`` / ``top_k`` may be scalars (one
 setting for the whole batch) or length-B sequences, and they become
 per-slot engine state — mixed greedy / sampled streams share the single
 compiled decode chunk.
+
+Speculative decoding rides the same facade: with ``cfg.serve.spec_k > 0``
+the scheduler derives a draft model (``models/draft.py``) and decode
+rounds become propose-K / verify-all / commit-accepted — ``generate``'s
+``spec_k`` argument (scalar or per-request vector) opts individual
+requests up or down, and greedy output stays bitwise identical to plain
+decode either way.
 """
 from __future__ import annotations
 
@@ -28,6 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.models.draft import make_draft
 from repro.serve.scheduler import Request, SlotScheduler
 
 Per = Union[float, int, Sequence, jax.Array, np.ndarray]
@@ -56,6 +64,7 @@ class ServeEngine:
         self.max_seq = max_seq
         self.max_batch = max_batch
         self._schedulers = {}        # max_batch -> SlotScheduler
+        self._draft = None           # derived once, shared by schedulers
         self._rid = 0
 
     # ------------------------------------------------------------------
@@ -71,27 +80,41 @@ class ServeEngine:
         if self._schedulers and next(
                 iter(self._schedulers.values())).params is not self.params:
             self._schedulers.clear()
+            self._draft = None       # derived from the old weights
         kb = self.max_batch or batch
         if kb not in self._schedulers:
             serve = dataclasses.replace(
                 self.cfg.serve, max_batch=kb, max_seq=self.max_seq)
+            if serve.spec_k > 0 and self._draft is None:
+                # derive the draft ONCE per weights: compress_params is
+                # a real derivation pass, and the draft doesn't depend
+                # on the slot geometry — every scheduler shares it
+                self._draft = make_draft(self.params, self.cfg, serve)
             self._schedulers[kb] = SlotScheduler(
-                self.cfg, self.params, serve=serve)
+                self.cfg, self.params, serve=serve, draft=self._draft)
         return self._schedulers[kb]
 
     def generate(self, tokens: jax.Array, max_new: int = 32,
                  temperature: Per = 0.0, top_k: Per = 0,
-                 key: Optional[jax.Array] = None) -> GenerationResult:
-        """tokens: (B, S) prompt ids.  ``temperature`` / ``top_k`` may be
-        scalars or per-request length-B vectors; a request is greedy when
-        its temperature is 0.  When sampling and no key is given, per-slot
-        keys derive from cfg.serve.seed and the request id — sampling
-        without a key is a valid request, not a crash."""
+                 key: Optional[jax.Array] = None,
+                 spec_k: Optional[Per] = None) -> GenerationResult:
+        """tokens: (B, S) prompt ids.  ``temperature`` / ``top_k`` /
+        ``spec_k`` may be scalars or per-request length-B vectors; a
+        request is greedy when its temperature is 0.  When sampling and
+        no key is given, per-slot keys derive from cfg.serve.seed and the
+        request id — sampling without a key is a valid request, not a
+        crash.  ``spec_k`` (speculative tokens per verify round) defaults
+        to ``cfg.serve.spec_k`` and is clamped to it: speculation only
+        runs when the engine was built with a draft (spec_k > 0 in the
+        serve config), but individual requests may opt down to plain
+        decode with spec_k=0."""
         B, S = tokens.shape
         assert S + max_new <= self.max_seq
         sched = self._scheduler(B)
         temps = _per_request(temperature, B, "temperature")
         ks = _per_request(top_k, B, "top_k")
+        sks = (None if spec_k is None
+               else _per_request(spec_k, B, "spec_k"))
         prompts = np.asarray(tokens, np.int32)
         reqs = []
         for b in range(B):
@@ -103,7 +126,9 @@ class ServeEngine:
             reqs.append(Request(rid=self._rid, tokens=prompts[b],
                                 max_new=max_new,
                                 temperature=float(temps[b]),
-                                top_k=int(ks[b]), key=rk))
+                                top_k=int(ks[b]), key=rk,
+                                spec_k=(None if sks is None
+                                        else int(sks[b]))))
             self._rid += 1
         done = {c.rid: c for c in sched.run(reqs)}
         out = np.stack([done[r.rid].tokens for r in reqs])

@@ -64,6 +64,32 @@ count-min admission filter in serve/prefix_cache.py and is ZERO-COPY: a
 hit writes the cached entry's physical block ids into the new slot's
 table and bumps their refcounts; no KV rows move.  Admission donates the
 admitting slot's own prefill blocks to the cache the same way.
+
+Copy-on-write: in a SPECULATIVE engine a slot never decodes into a block
+whose refcount is above one.  After hit installation and admission
+donation, any shared block the slot's decode region [S - 1, ...) reaches
+is forked — a fresh pool block is allocated, the rows are copied
+device-side (target and draft pools alike), the table entry is rebound
+and the shared block loses one reference (``_ensure_exclusive``).  Plain
+engines skip the fork: their only shared-block write is the idempotent
+last-prompt-token rewrite.  Speculative verify writes draft proposals
+that may be REJECTED, so there the fork rule is what makes "a cached
+prefix entry's blocks are immutable while cached" hold.
+
+Speculative decoding (``serve.spec_k > 0`` / per-request
+``Request.spec_k``, attention families): a derived draft model
+(``models/draft.py`` — truncated and/or count-sketch-compressed) runs a
+K-token greedy proposal loop per slot inside the SAME compiled chunk,
+writing its own shallow paged pool through the slot's block table, and
+the target verifies all K+1 positions in one multi-query decode
+(``tf.verify_step``).  The accepted prefix commits (per-slot position
+advance), rejection rolls the slot back simply by not advancing —
+rejected rows sit above the slot's position and are overwritten by the
+next round before any query can attend them.  Greedy speculative output
+is token-for-token identical to plain greedy decode; sampled slots fall
+back to one verified token per round drawn with their own key.  A spec
+engine reserves ``spec_k`` extra rows per slot so overhang writes stay
+inside the slot's own blocks.
 """
 from __future__ import annotations
 
@@ -77,7 +103,9 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, ServeConfig
 from repro.models import transformer as tf
+from repro.models.draft import Draft, make_draft
 from repro.serve.prefix_cache import SketchPrefixCache
+from repro.serve.speculative import build_spec_chunk
 
 KV_FAMILIES = ("dense", "moe", "audio", "vlm")
 RECURRENT_FAMILIES = ("ssm", "hybrid")
@@ -96,6 +124,10 @@ class Request:
     top_k: int = 0
     seed: Optional[int] = None
     key: Optional[jax.Array] = None
+    # speculative tokens per round: None -> the engine default
+    # (cfg.serve.spec_k); clamped to the engine max; 0 = plain decode for
+    # this request even inside a speculative engine.
+    spec_k: Optional[int] = None
 
 
 @dataclass
@@ -154,6 +186,22 @@ class BlockAllocator:
             if self.rc[b] == 0:
                 self._free.append(b)
 
+    def fork(self, b: int) -> Optional[int]:
+        """Copy-on-write preparation for one holder of block ``b``: when
+        the caller is the sole holder (refcount 1) the block is returned
+        unchanged; otherwise a fresh block is taken (refcount 1), the
+        caller's reference on ``b`` is dropped, and the new id returned —
+        the caller then copies the rows device-side and rebinds its
+        table.  None when the pool has no free block (caller defers)."""
+        assert self.rc[b] >= 1, f"fork of unheld block {b}"
+        if self.rc[b] == 1:
+            return b
+        ids = self.alloc(1)
+        if ids is None:
+            return None
+        self.rc[b] -= 1          # rc > 1: never reaches the free list here
+        return ids[0]
+
     def reserved_bytes(self) -> int:
         return self.reserved * self.block_bytes
 
@@ -165,6 +213,7 @@ class DecodeState(NamedTuple):
     """All device-resident engine state (a pytree; see
     launch.shardings.serve_state_pspecs for its mesh placement)."""
     cache: Dict[str, Any]        # KV block pool / recurrent slot state
+                                 # (+ "draft" sub-pool in a spec engine)
     tables: jax.Array            # (B, blocks_per_slot) int32 block tables
     cur: jax.Array               # (B, 1) next token to feed per slot
     pos: jax.Array               # (B,)  write/attend position per slot
@@ -172,12 +221,14 @@ class DecodeState(NamedTuple):
     temp: jax.Array              # (B,)  sampling temperature per slot
     top_k: jax.Array             # (B,)  top-k cutoff per slot (0 = off)
     keys: jax.Array              # (B, 2) per-slot sampling PRNG keys
+    spec_k: jax.Array            # (B,)  speculative proposals per round
 
 
 class SlotScheduler:
     def __init__(self, cfg: ModelConfig, params: Any,
                  serve: Optional[ServeConfig] = None,
-                 temperature: float = 0.0):
+                 temperature: float = 0.0,
+                 draft: Optional[Draft] = None):
         if cfg.family not in KV_FAMILIES + RECURRENT_FAMILIES:
             raise ValueError(f"unknown family {cfg.family!r}")
         self.cfg = cfg
@@ -187,11 +238,23 @@ class SlotScheduler:
         self.is_kv = cfg.family in KV_FAMILIES
         sv = self.serve
         B = sv.max_batch
+        # speculative decode: an explicit draft wins; else derive one per
+        # the serve knobs (None when spec_k == 0 or the family has no KV)
+        self.draft = (draft if draft is not None
+                      else make_draft(params, cfg, sv))
+        self.spec_max = (int(sv.spec_k)
+                         if self.is_kv and self.draft is not None else 0)
+        if self.draft is not None and not self.is_kv:
+            raise ValueError("speculative decode needs a kv-cache family")
+        self.spec_rounds = 0       # verify rounds run by speculating slots
+        self.spec_proposed = 0     # draft tokens proposed in those rounds
+        self.spec_accepted = 0     # draft tokens verified-and-emitted
         self._queue: List[Request] = []
         self._slot_req: List[Optional[Request]] = [None] * B
         self._slot_out: List[List[int]] = [[] for _ in range(B)]
         self._slot_hit: List[bool] = [False] * B
         self._slot_blocks: List[List[int]] = [[] for _ in range(B)]
+        self._slot_spec: List[int] = [0] * B
         # rid -> pending admit_plen: set on a request's FIRST admission
         # attempt so pool-pressure retries don't re-feed the count-min
         # tracker (a queued one-shot prompt must not accrue one count per
@@ -212,10 +275,23 @@ class SlotScheduler:
             assert sv.prefix_block % self.block_size == 0, (
                 f"kv_block_size {self.block_size} must divide prefix_block "
                 f"{sv.prefix_block} so cached prefixes share whole blocks")
-            self.blocks_per_slot = -(-sv.max_seq // self.block_size)
+            # a spec engine's verify/draft writes overhang the committed
+            # sequence by up to spec_max rows — every slot (even ones
+            # decoding plainly: the verify step is batch-wide) reserves
+            # them so overhang writes land in its own blocks, not drop
+            self.spec_overhang = self.spec_max
+            self.blocks_per_slot = -(-(sv.max_seq + self.spec_overhang)
+                                     // self.block_size)
             nb = sv.num_kv_blocks or B * self.blocks_per_slot
             self.num_blocks = nb
             cache = tf.init_paged_cache(cfg, nb, self.block_size)
+            if self.draft is not None:
+                # the draft's shallow pool mirrors the target pool block
+                # for block (same ids, same tables, same refcounts), so
+                # prefix sharing, CoW forks and frees cover both for free
+                cache = dict(cache)
+                cache["draft"] = tf.init_paged_cache(
+                    self.draft.cfg, nb, self.block_size)
             pool_bytes = sum(int(a.size) * int(a.dtype.itemsize)
                              for a in jax.tree.leaves(cache))
             self.alloc = BlockAllocator(nb, pool_bytes // nb)
@@ -228,6 +304,7 @@ class SlotScheduler:
             self.block_size = 0
             self.blocks_per_slot = 0
             self.num_blocks = 0
+            self.spec_overhang = 0
             self.alloc = None
             self.prefix_cache = None
             cache = tf.init_cache(cfg, B, sv.max_seq)
@@ -242,12 +319,28 @@ class SlotScheduler:
             temp=jnp.zeros((B,), jnp.float32),
             top_k=jnp.zeros((B,), jnp.int32),
             keys=jnp.zeros((B, 2), jnp.uint32),
+            spec_k=jnp.zeros((B,), jnp.int32),
         )
-        self._chunk_fn = jax.jit(self._make_chunk(), donate_argnums=(1,))
+        if self.spec_max > 0:
+            self._chunk_fn = jax.jit(self._make_spec_chunk(),
+                                     donate_argnums=(2,))
+        else:
+            self._chunk_fn = jax.jit(self._make_chunk(),
+                                     donate_argnums=(1,))
         if self.is_kv:
             self._prefill_chunk = jax.jit(
                 functools.partial(tf.prefill_chunk, cfg=cfg),
                 donate_argnums=(1,))
+            if self.draft is not None:
+                self._draft_prefill_chunk = jax.jit(
+                    functools.partial(tf.prefill_chunk, cfg=self.draft.cfg),
+                    donate_argnums=(1,))
+            # copy-on-write block fork: copy one physical block's rows
+            # (target AND draft pools) to a fresh block, device-side
+            self._copy_block = jax.jit(
+                lambda c, src, dst: jax.tree.map(
+                    lambda a: a.at[:, dst].set(a[:, src]), c),
+                donate_argnums=(0,))
         else:
             self._insert_fn = jax.jit(self._insert_state,
                                       donate_argnums=(0,))
@@ -260,11 +353,8 @@ class SlotScheduler:
     # Compiled pieces
     # ------------------------------------------------------------------
 
-    def _make_chunk(self):
-        cfg = self.cfg
-        chunk = self.serve.decode_chunk
-        is_kv = self.is_kv
-
+    @staticmethod
+    def _make_sampler():
         def sample(key, lg, temp, top_k):
             """Per-slot next token: greedy when temp == 0, else top-k
             filtered temperature sampling with the slot's own key.  The
@@ -296,6 +386,14 @@ class SlotScheduler:
             return jax.lax.cond(jnp.any(temp > 0.0), do_sample, do_greedy,
                                 (key, lg))
 
+        return sample
+
+    def _make_chunk(self):
+        cfg = self.cfg
+        chunk = self.serve.decode_chunk
+        is_kv = self.is_kv
+        sample = self._make_sampler()
+
         def chunk_fn(params, state: DecodeState):
             temp, top_k = state.temp, state.top_k
             # block tables are fixed for the chunk (admission happens
@@ -321,10 +419,20 @@ class SlotScheduler:
                 jax.lax.scan(step, carry, None, length=chunk)
             new_state = DecodeState(cache=cache, tables=state.tables,
                                     cur=cur, pos=pos, remaining=remaining,
-                                    temp=temp, top_k=top_k, keys=keys)
+                                    temp=temp, top_k=top_k, keys=keys,
+                                    spec_k=state.spec_k)
             return new_state, toks, emits        # toks/emits: (chunk, B)
 
         return chunk_fn
+
+    def _make_spec_chunk(self):
+        """Speculative decode chunk (serve/speculative.py): rounds of
+        draft-propose -> verify-all -> accept/rollback, ONE compilation
+        for the engine's lifetime; mixed spec / non-spec / sampled slots
+        share it."""
+        return build_spec_chunk(self.cfg, self.draft.cfg,
+                                self.serve.decode_chunk, self.spec_max,
+                                self._make_sampler())
 
     @staticmethod
     def _insert_state(cache, block, slot):
@@ -355,7 +463,8 @@ class SlotScheduler:
             # reject up front what the pool can never serve — otherwise
             # the impossible request head-of-line-blocks the FIFO queue
             # and only fails once every in-flight slot has drained
-            need = -(-(S + req.max_new) // self.block_size)
+            need = -(-(S + req.max_new + self.spec_overhang)
+                     // self.block_size)
             assert need <= self.num_blocks, (
                 f"request needs {need} KV blocks of {self.block_size}, "
                 f"pool has {self.num_blocks} (raise "
@@ -396,9 +505,17 @@ class SlotScheduler:
             seg = prompt[off:off + bucket]
             tok = np.zeros((1, bucket), np.int32)
             tok[0, :len(seg)] = seg
-            cache = self._prefill_chunk(self.params, cache,
-                                        jnp.asarray(tok), table,
-                                        jnp.int32(off))
+            tok = jnp.asarray(tok)
+            kv = self._prefill_chunk(self.params, {"kv": cache["kv"]},
+                                     tok, table, jnp.int32(off))
+            cache = {**cache, "kv": kv["kv"]}
+            if self.draft is not None:
+                # the draft pool prefills in lockstep through the same
+                # table, so cached-prefix blocks hold BOTH models' rows
+                dkv = self._draft_prefill_chunk(
+                    self.draft.params, cache["draft"], tok, table,
+                    jnp.int32(off))
+                cache = {**cache, "draft": dkv}
             off += bucket
         return cache
 
@@ -412,6 +529,33 @@ class SlotScheduler:
         while ids is None and self.prefix_cache.evict_one(idle_only=True):
             ids = self.alloc.alloc(n)
         return ids
+
+    def _ensure_exclusive(self, slot: int, slot_ids: List[int], cache,
+                          first_write: int):
+        """Copy-on-write fork: make every block of ``slot`` that decode
+        can write — logical blocks covering positions >= ``first_write``
+        — exclusively held (refcount 1).  Shared blocks (prefix-cache
+        entries / other slots referencing them) are forked: a fresh pool
+        block is allocated (evicting idle cache entries under pressure),
+        the rows are copied device-side in BOTH the target and draft
+        pools, ``slot_ids`` is rebound in place and the shared block
+        loses this slot's reference.  Returns (cache, ok); ok False when
+        the pool can't supply a fork target right now (caller unwinds
+        and defers the admission)."""
+        bs = self.block_size
+        for i in range(first_write // bs, len(slot_ids)):
+            b = slot_ids[i]
+            nb = self.alloc.fork(b)
+            while nb is None and self.prefix_cache.evict_one(
+                    idle_only=True):
+                nb = self.alloc.fork(b)
+            if nb is None:
+                return cache, False
+            if nb != b:      # was shared: copy rows into the fresh block
+                cache = self._copy_block(cache, jnp.int32(b),
+                                         jnp.int32(nb))
+                slot_ids[i] = nb
+        return cache, True
 
     def _admit(self, slot: int, req: Request) -> bool:
         """Try to admit ``req`` into ``slot``; False when the block pool
@@ -450,7 +594,7 @@ class SlotScheduler:
                 self.alloc.ref(shared)
             if admit_plen is not None and admit_plen <= start_off:
                 admit_plen = None    # nothing beyond what we already share
-            n_total = -(-(S + req.max_new) // bs)
+            n_total = -(-(S + req.max_new + self.spec_overhang) // bs)
             new_ids = self._take_blocks(n_total - len(shared))
             if new_ids is None:
                 if hit is not None:
@@ -462,13 +606,6 @@ class SlotScheduler:
                 return False
             slot_ids = shared + new_ids
             self._slot_blocks[slot] = slot_ids
-            # used-rows tracks DEMAND: every row a live request attends,
-            # shared prefix rows counted per referencing request — so
-            # demand exceeding reserved is the zero-copy sharing win
-            # made visible, not an accounting error
-            self._slot_rows[slot] = S + req.max_new
-            self._used_rows += self._slot_rows[slot]
-            self.peak_used_rows = max(self.peak_used_rows, self._used_rows)
             row = np.full((self.blocks_per_slot,), self.num_blocks,
                           np.int32)
             row[:len(slot_ids)] = slot_ids
@@ -479,6 +616,46 @@ class SlotScheduler:
             if admit_plen is not None:
                 self.prefix_cache.admit(prompt, admit_plen,
                                         tuple(slot_ids[:admit_plen // bs]))
+            # copy-on-write (speculative engines): fork any block the
+            # slot's decode region [S-1, ...) reaches that is still
+            # shared (prefix hit with plen == S, or the donation above).
+            # Plain decode's only shared-block write is the idempotent
+            # last-prompt-token rewrite, but a verify step writes draft
+            # proposals that may be REJECTED — a speculating slot must
+            # never write a block with refcount > 1.
+            if self.spec_max:
+                cache, ok = self._ensure_exclusive(slot, slot_ids, cache,
+                                                   S - 1)
+            else:
+                ok = True
+            if not ok:
+                # pool exhausted mid-fork: unwind the slot's references
+                # (the cache keeps any entry admitted above — its blocks
+                # now hold valid prefix rows) and leave the request
+                # queued; the memo records that admission already
+                # happened so a retry won't re-count or re-admit
+                self._state = st._replace(
+                    cache=cache,
+                    tables=st.tables.at[slot].set(
+                        jnp.full((self.blocks_per_slot,), self.num_blocks,
+                                 jnp.int32)))
+                self.alloc.unref(slot_ids)
+                self._slot_blocks[slot] = []
+                self._admit_memo[req.rid] = None
+                return False
+            st = st._replace(
+                tables=st.tables.at[slot].set(
+                    jnp.asarray(np.concatenate([
+                        np.asarray(slot_ids, np.int32),
+                        np.full((self.blocks_per_slot - len(slot_ids),),
+                                self.num_blocks, np.int32)]))))
+            # used-rows tracks DEMAND: every row a live request attends,
+            # shared prefix rows counted per referencing request — so
+            # demand exceeding reserved is the zero-copy sharing win
+            # made visible, not an accounting error
+            self._slot_rows[slot] = S + req.max_new
+            self._used_rows += self._slot_rows[slot]
+            self.peak_used_rows = max(self.peak_used_rows, self._used_rows)
             self._admit_memo.pop(req.rid, None)
         else:
             # recurrent: exact-length prefill of all but the last token
@@ -492,6 +669,11 @@ class SlotScheduler:
             cache = self._insert_fn(st.cache, pre, jnp.int32(slot))
         temp = (self.temperature if req.temperature is None
                 else float(req.temperature))
+        eff_spec = 0
+        if self.spec_max:
+            eff_spec = (self.serve.spec_k if req.spec_k is None
+                        else int(req.spec_k))
+            eff_spec = max(0, min(eff_spec, self.spec_max))
         st = st._replace(
             cache=cache,
             cur=st.cur.at[slot, 0].set(int(prompt[S - 1])),
@@ -500,11 +682,15 @@ class SlotScheduler:
             temp=st.temp.at[slot].set(temp),
             top_k=st.top_k.at[slot].set(int(req.top_k)),
             keys=st.keys.at[slot].set(self._request_key(req)),
+            spec_k=st.spec_k.at[slot].set(eff_spec),
         )
         self._state = st
         self._slot_req[slot] = req
         self._slot_out[slot] = []
         self._slot_hit[slot] = hit is not None
+        # host-side mirror for acceptance accounting: sampled slots never
+        # accept proposals in-graph, so they don't count as speculating
+        self._slot_spec[slot] = eff_spec if temp == 0.0 else 0
         return True
 
     def _retire(self) -> List[Completion]:
@@ -520,6 +706,7 @@ class SlotScheduler:
                     prefix_hit=self._slot_hit[s]))
                 self._slot_req[s] = None
                 self._slot_out[s] = []
+                self._slot_spec[s] = 0
                 if self.is_kv:
                     freed.append(s)
         if freed:
@@ -557,14 +744,33 @@ class SlotScheduler:
                 self._queue.pop(0)
         if not any(r is not None for r in self._slot_req):
             return []
-        self._state, toks, emits = self._chunk_fn(self.params, self._state)
+        if self.spec_max > 0:
+            self._state, toks, emits = self._chunk_fn(
+                self.params, self.draft.params, self._state)
+        else:
+            self._state, toks, emits = self._chunk_fn(self.params,
+                                                      self._state)
         self.decode_steps += self.serve.decode_chunk
         toks = np.asarray(toks)
         emits = np.asarray(emits)
+        if toks.ndim == 2:               # plain chunk: one token per step
+            toks = toks[:, :, None]
+            emits = emits[:, :, None]
         for t in range(toks.shape[0]):
             for s in range(toks.shape[1]):
-                if emits[t, s] and self._slot_req[s] is not None:
-                    self._slot_out[s].append(int(toks[t, s]))
+                if self._slot_req[s] is None:
+                    continue
+                e = int(emits[t, s].sum())
+                if e == 0:
+                    continue
+                self._slot_out[s].extend(
+                    int(x) for x in toks[t, s][emits[t, s]])
+                if self._slot_spec[s] > 0:
+                    # one verify round: slot proposed spec_k tokens and
+                    # e - 1 of them survived verification
+                    self.spec_rounds += 1
+                    self.spec_proposed += self._slot_spec[s]
+                    self.spec_accepted += e - 1
         return self._retire()
 
     def run(self, requests: Optional[List[Request]] = None
@@ -601,6 +807,22 @@ class SlotScheduler:
     @property
     def state(self) -> DecodeState:
         return self._state
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of draft proposals that survived verification, over
+        every verify round run by speculating (greedy, spec_k > 0)
+        slots.  0.0 when nothing speculated."""
+        return self.spec_accepted / max(self.spec_proposed, 1)
+
+    @property
+    def mean_accepted_run(self) -> float:
+        """Mean tokens emitted per verify round by speculating slots
+        (accepted draft tokens + the verified correction/bonus token) —
+        the per-round decode advance; 1.0 means speculation never helps,
+        spec_k + 1 is the ceiling."""
+        return ((self.spec_accepted + self.spec_rounds)
+                / max(self.spec_rounds, 1))
 
     def kv_cache_bytes(self) -> int:
         """Total bytes of the slot cache (the whole pool for attention

@@ -1,0 +1,112 @@
+"""Speculative decoding rounds: draft-propose -> verify-all -> commit.
+
+This module builds the compiled chunk a speculative ``SlotScheduler``
+runs instead of the plain one-token-per-step scan.  One round, per slot:
+
+  1. the DRAFT model (``models/draft.py`` — a truncated and/or
+     count-sketch-compressed copy of the served weights) runs K+1 paged
+     decode micro-steps through the slot's block table against its own
+     shallow pool: the first K produce greedy proposals d_1..d_K, the
+     last only writes the draft KV row for d_K so the draft pool stays in
+     lockstep with whatever prefix ends up committed;
+  2. the TARGET scores all K+1 positions in ONE multi-query decode
+     (``transformer.verify_step``) — its logits at position pos+i are
+     bitwise what a plain decode step would produce after committing the
+     first i+1 tokens;
+  3. the longest verified prefix commits, plus the target's correction /
+     bonus token: the slot emits n+1 tokens where n is the count of
+     leading proposals matching the target's greedy choice (clipped to
+     the slot's spec_k, its remaining token budget, and forced to 0 for
+     sampled slots, which instead draw their one token with their own
+     key).  Rejection is positional rollback — the slot's position
+     simply doesn't advance past the accepted prefix, and the rejected
+     rows above it are rewritten by the next round before any causal
+     mask can expose them.
+
+Greedy speculative output is therefore token-for-token identical to
+plain greedy decode — acceptance rate changes HOW FAST tokens commit,
+never WHICH tokens — and slots with spec_k == 0 ride the same
+compilation as one-verified-token-per-round participants, so mixed
+spec / non-spec / sampled batches keep the engine's
+one-compilation-per-lifetime contract.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tf
+
+
+def build_spec_chunk(cfg: ModelConfig, draft_cfg: ModelConfig,
+                     decode_chunk: int, spec_max: int, sample):
+    """Build the speculative decode chunk: ``decode_chunk`` rounds of
+    propose/verify/commit over all slots, ONE compilation for the
+    engine's lifetime.  ``sample`` is the scheduler's per-slot sampler
+    (greedy when temp == 0, keyed top-k otherwise).  The returned
+    ``spec_chunk_fn(params, draft_params, state)`` maps a DecodeState to
+    (new_state, toks, emits) with toks/emits shaped
+    (decode_chunk, B, spec_max + 1) — emitted tokens are the leading
+    True-masked entries of each round's row, in order.
+    """
+    K = spec_max
+    V = cfg.vocab_size
+
+    def spec_chunk_fn(params, draft_params, state):
+        temp, top_k = state.temp, state.top_k
+        spec_k = jnp.minimum(state.spec_k, K)
+        tables = state.tables
+
+        def round_fn(carry, _):
+            kv, dkv, cur, pos, remaining, keys = carry
+
+            # -- draft: K proposals in K+1 micro-steps ----------------
+            def dbody(c, i):
+                dkv, tok = c
+                lg, dkv = tf.decode_step(draft_params, dkv, tok,
+                                         pos + i, draft_cfg,
+                                         tables=tables)
+                nxt = jnp.argmax(lg[:, :V].astype(jnp.float32),
+                                 axis=-1).astype(jnp.int32)
+                return (dkv, nxt[:, None]), tok[:, 0]
+
+            (dkv, _), fed = jax.lax.scan(dbody, (dkv, cur),
+                                         jnp.arange(K + 1))
+            vtok = jnp.swapaxes(fed, 0, 1)           # (B, K+1)
+
+            # -- target: verify all K+1 positions at once -------------
+            logits, kv = tf.verify_step(params, kv, vtok, pos, cfg,
+                                        tables=tables)
+            lg = logits[..., :V].astype(jnp.float32)  # (B, K+1, V)
+            greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+
+            # -- accept the longest verified prefix -------------------
+            drafts = vtok[:, 1:]                      # (B, K): d_1..d_K
+            match = (drafts == greedy[:, :-1]).astype(jnp.int32)
+            eligible = ((jnp.arange(K)[None, :] < spec_k[:, None])
+                        & (temp[:, None] == 0.0)).astype(jnp.int32)
+            n = jnp.sum(jnp.cumprod(match * eligible, axis=1),
+                        axis=1).astype(jnp.int32)     # (B,)
+            # sampled slots draw their one token with their own key
+            keys, tok0 = sample(keys, lg[:, 0], temp, top_k)
+            out = greedy.at[:, 0].set(tok0)           # (B, K+1)
+            e = jnp.minimum(n + 1, remaining)         # emitted count
+            emit = jnp.arange(K + 1)[None, :] < e[:, None]
+            last = jnp.take_along_axis(
+                out, jnp.maximum(e - 1, 0)[:, None], axis=1)[:, 0]
+            cur = jnp.where(e > 0, last, cur[:, 0])[:, None]
+            pos = pos + e
+            remaining = remaining - e
+            return (kv, dkv, cur, pos, remaining, keys), (out, emit)
+
+        carry = ({"kv": state.cache["kv"]}, state.cache["draft"],
+                 state.cur, state.pos, state.remaining, state.keys)
+        (kv, dkv, cur, pos, remaining, keys), (toks, emits) = \
+            jax.lax.scan(round_fn, carry, None, length=decode_chunk)
+        new_state = state._replace(
+            cache={"kv": kv["kv"], "draft": dkv},
+            cur=cur, pos=pos, remaining=remaining, keys=keys)
+        return new_state, toks, emits    # toks/emits: (chunk, B, K+1)
+
+    return spec_chunk_fn

@@ -24,14 +24,12 @@ DCN byte count shows the compression.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.hashes import make_mode_hash
 from repro.models import model as M
 
 MIN_COMPRESS_ELEMS = 1 << 16

@@ -6,7 +6,6 @@ import itertools
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -47,8 +46,8 @@ except ImportError:
         return deco
 
 from repro.core import (
-    cs_apply, fcs_cp, fcs_general, fcs_kron_compress, fcs_kron_decompress,
-    fcs_sketch_len, fcs_tiuu, fcs_tuuu, hcs_cp, hcs_general,
+    fcs_cp, fcs_general, fcs_kron_compress, fcs_kron_decompress,
+    fcs_sketch_len, fcs_tiuu, hcs_cp, hcs_general,
     make_mode_hash, make_tensor_hashes, ts_cp, ts_general,
 )
 from repro.core.hashes import combined_fcs_hash

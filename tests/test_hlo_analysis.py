@@ -8,7 +8,7 @@ import textwrap
 
 import pytest
 
-from repro.launch.hlo_analysis import (HloCost, _collective_traffic,
+from repro.launch.hlo_analysis import (_collective_traffic,
                                        _shape_elems_bytes, roofline_terms)
 
 

@@ -620,3 +620,88 @@ def test_rtpm_nan_safe_selection():
     vals = jnp.array([1.0, jnp.nan, 3.0, jnp.inf, 2.0])
     assert int(_nan_safe_argmax(vals)) == 2
     assert int(_nan_safe_argmax(jnp.array([jnp.nan, jnp.nan]))) == 0
+
+
+def _allocator_program(num_blocks: int, seed: int, steps: int) -> None:
+    """Drive one random alloc/ref/unref/fork program against a
+    BlockAllocator and assert its books after every operation:
+
+      * conservation: reserved + free == num_blocks, always
+      * no leaks: every block with refcount > 0 is reserved (off the
+        free list), every refcount-0 block is ON the free list
+      * no double-frees: the free list never holds duplicates
+      * fork: the forked-from block keeps its other holders, the fork
+        target is exclusively held
+    """
+    from repro.serve.scheduler import BlockAllocator
+
+    rng = np.random.RandomState(seed)
+    alloc = BlockAllocator(num_blocks, block_bytes=64)
+    held: list = []            # one entry per reference we hold
+
+    def check():
+        assert alloc.reserved + alloc.free_count == alloc.num_blocks
+        free = alloc._free
+        assert len(set(free)) == len(free), "double-freed block"
+        for b in range(alloc.num_blocks):
+            rc = int(alloc.rc[b])
+            assert rc >= 0
+            assert (rc == 0) == (b in free), (b, rc)
+        assert sorted(b for b in held) == sorted(
+            b for b in range(alloc.num_blocks)
+            for _ in range(int(alloc.rc[b]))), "leaked or lost reference"
+
+    for _ in range(steps):
+        op = rng.randint(4)
+        if op == 0:                                    # alloc
+            n = int(rng.randint(1, 4))
+            ids = alloc.alloc(n)
+            if ids is None:
+                assert n > alloc.free_count
+            else:
+                held.extend(ids)
+        elif op == 1 and held:                         # ref
+            b = held[rng.randint(len(held))]
+            alloc.ref([b])
+            held.append(b)
+        elif op == 2 and held:                         # unref
+            b = held.pop(rng.randint(len(held)))
+            alloc.unref([b])
+        elif op == 3 and held:                         # fork
+            i = rng.randint(len(held))
+            b = held[i]
+            rc_before = int(alloc.rc[b])
+            nb = alloc.fork(b)
+            if nb is None:
+                assert alloc.free_count == 0 and rc_before > 1
+            else:
+                held[i] = nb
+                assert int(alloc.rc[nb]) >= 1
+                if nb != b:
+                    assert rc_before > 1
+                    assert int(alloc.rc[b]) == rc_before - 1
+                    assert int(alloc.rc[nb]) == 1
+                else:
+                    assert rc_before == 1
+        check()
+    while held:                                        # full teardown
+        alloc.unref([held.pop()])
+        check()
+    assert alloc.reserved == 0 and alloc.free_count == num_blocks
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(num_blocks=st.integers(1, 12), seed=st.integers(0, 1 << 16),
+           steps=st.integers(1, 120))
+    def test_block_allocator_fuzz(num_blocks, seed, steps):
+        _allocator_program(num_blocks, seed, steps)
+except ImportError:
+    # hypothesis isn't installed in this container: run the same property
+    # over a deterministic grid of random programs instead
+    @pytest.mark.parametrize("num_blocks,seed", [
+        (1, 0), (2, 1), (3, 2), (4, 3), (6, 4), (8, 5), (12, 6), (5, 7)])
+    def test_block_allocator_fuzz(num_blocks, seed):
+        _allocator_program(num_blocks, seed, steps=120)

@@ -7,13 +7,11 @@ import sys
 import textwrap
 
 import jax
-import numpy as np
 import pytest
 
 from repro.configs.base import SHAPES, shape_applicable
 from repro.configs.registry import ARCH_IDS, get_config
-from repro.launch.shardings import (MODEL_AXIS, DATA_AXIS,
-                                    build_param_pspecs, cache_pspecs,
+from repro.launch.shardings import (build_param_pspecs, cache_pspecs,
                                     make_rules)
 from repro.models import model as M
 

@@ -8,7 +8,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.base import SketchConfig
 from repro.configs.registry import reduced_config
 from repro.kernels.ops import sketch_update_op
 from repro.kernels.ref import sketch_update_ref
@@ -233,7 +232,6 @@ def test_checkpoint_roundtrip_sketch_state(tmp_path):
 
 
 def test_opt_state_pspecs_divide_evenly():
-    from jax.sharding import PartitionSpec as P
     from repro.configs.registry import get_config
     from repro.launch.shardings import (build_param_pspecs, make_rules,
                                         opt_state_pspecs)

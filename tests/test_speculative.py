@@ -1,0 +1,325 @@
+"""Speculative decoding subsystem: draft derivation (truncated /
+count-sketch-compressed), multi-query verification, greedy-identity
+guarantees across spec_k / mixed batches / prefix-cache hits, and
+copy-on-write protection of shared pool blocks."""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import reduced_config
+from repro.models import draft as dr
+from repro.models import model as M
+from repro.models import transformer as tf
+from repro.serve.engine import ServeEngine
+from repro.serve.scheduler import Request, SlotScheduler
+
+
+@pytest.fixture(scope="module")
+def gemma():
+    cfg = reduced_config("gemma-2b")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _requests(cfg, rng, lens, max_new=5, **kw):
+    return [Request(rid=i,
+                    tokens=rng.randint(0, cfg.vocab_size, (n,)).astype(
+                        np.int32),
+                    max_new=max_new, **kw)
+            for i, n in enumerate(lens)]
+
+
+def _serve(cfg, **kw):
+    base = dict(max_batch=2, max_seq=96, decode_chunk=4, prefill_bucket=16,
+                prefix_block=16, kv_block_size=16, admit_threshold=100)
+    base.update(kw)
+    return dataclasses.replace(cfg.serve, **base)
+
+
+# ---------------------------------------------------------------------------
+# Draft derivation
+# ---------------------------------------------------------------------------
+
+
+def test_truncate_params_slices_block_stack(gemma):
+    cfg, params = gemma
+    dparams, dcfg = dr.truncate_params(params, cfg, 1)
+    assert dcfg.num_layers == 1
+    for leaf, dleaf in zip(jax.tree.leaves(params["blocks"]),
+                           jax.tree.leaves(dparams["blocks"])):
+        assert dleaf.shape == (1,) + leaf.shape[1:]
+        np.testing.assert_array_equal(np.asarray(dleaf[0]),
+                                      np.asarray(leaf[0]))
+    # embed / head / final_norm are shared, not copied
+    assert dparams["embed"] is params["embed"]
+    with pytest.raises(ValueError):
+        dr.truncate_params(params, cfg, cfg.num_layers + 1)
+
+
+def test_compress_params_sketches_weights_and_head(gemma):
+    """ratio > 1 count-sketch-compresses block matmuls along their
+    contraction dim (same shapes back, different values) and swaps the
+    head for the FCS-sketched (J, padded_vocab) projection wired through
+    cfg.sketch.sketched_head."""
+    cfg, params = gemma
+    dparams, dcfg = dr.compress_params(params, cfg, 2, ratio=2)
+    assert dcfg.sketch.sketched_head
+    J = cfg.d_model // 2
+    assert dcfg.sketch.head_hash_len == J
+    assert dparams["head"].shape == (J, cfg.padded_vocab)
+    wq = np.asarray(params["blocks"]["attn"]["wq"][:2], np.float32)
+    dwq = np.asarray(dparams["blocks"]["attn"]["wq"], np.float32)
+    assert dwq.shape == wq.shape
+    assert not np.array_equal(dwq, wq)
+    # the reconstruction is an approximation, not noise: it correlates
+    # strongly with the original weight
+    corr = np.corrcoef(wq.ravel(), dwq.ravel())[0, 1]
+    assert corr > 0.5, corr
+    # norms pass through untouched
+    np.testing.assert_array_equal(
+        np.asarray(dparams["blocks"]["norm1"]),
+        np.asarray(params["blocks"]["norm1"][:2]))
+    # ratio <= 1 degenerates to pure truncation
+    tparams, tcfg = dr.compress_params(params, cfg, 2, ratio=0)
+    assert not tcfg.sketch.sketched_head
+    np.testing.assert_array_equal(
+        np.asarray(tparams["blocks"]["attn"]["wq"]), wq)
+
+
+def test_cs_reconstruction_error_shrinks_with_buckets():
+    """More sketch buckets (lower ratio) -> lower reconstruction error:
+    the count-sketch collision noise scales down with J."""
+    w = jax.random.normal(jax.random.PRNGKey(3), (256, 32))
+    errs = []
+    for ratio in (8, 2):
+        w2 = dr._cs_reconstruct(w, ratio, rows=3, seed=7)
+        errs.append(float(jnp.linalg.norm(w2 - w) / jnp.linalg.norm(w)))
+    assert errs[1] < errs[0], errs
+
+
+def test_make_draft_gating(gemma):
+    cfg, params = gemma
+    assert dr.make_draft(params, cfg, _serve(cfg, spec_k=0)) is None
+    d = dr.make_draft(params, cfg, _serve(cfg, spec_k=2, draft_depth=1))
+    assert d is not None and d.cfg.num_layers == 1
+    ssm = reduced_config("xlstm-1.3b")
+    sparams = M.init_params(jax.random.PRNGKey(0), ssm)
+    assert dr.make_draft(sparams, ssm,
+                         dataclasses.replace(ssm.serve, spec_k=2)) is None
+
+
+# ---------------------------------------------------------------------------
+# verify_step
+# ---------------------------------------------------------------------------
+
+
+def test_verify_step_matches_sequential_decode(gemma):
+    """The foundation of greedy identity: verify logits at position
+    index+i are bitwise what a plain decode step produces after
+    committing the first i+1 tokens, and the committed KV rows match."""
+    cfg, params = gemma
+    B, bs, nbs = 2, 8, 6
+    NB = B * nbs
+    rng = np.random.RandomState(5)
+    toks = jnp.asarray(rng.randint(0, cfg.vocab_size, (B, 4)), jnp.int32)
+    pos0 = jnp.asarray([3, 1], jnp.int32)
+    tables = jnp.arange(NB, dtype=jnp.int32).reshape(B, nbs)
+
+    cache_v = tf.init_paged_cache(cfg, NB, bs)
+    ver = jax.jit(functools.partial(tf.verify_step, cfg=cfg))
+    lg_v, cache_v = ver(params, cache_v, toks, pos0, tables=tables)
+
+    cache_d = tf.init_paged_cache(cfg, NB, bs)
+    dec = jax.jit(functools.partial(tf.decode_step, cfg=cfg))
+    for i in range(toks.shape[1]):
+        lg_d, cache_d = dec(params, cache_d, toks[:, i:i + 1], pos0 + i,
+                            tables=tables)
+        np.testing.assert_array_equal(np.asarray(lg_v[:, i]),
+                                      np.asarray(lg_d),
+                                      err_msg=f"position offset {i}")
+    np.testing.assert_array_equal(np.asarray(cache_v["kv"]["k"]),
+                                  np.asarray(cache_d["kv"]["k"]))
+
+
+# ---------------------------------------------------------------------------
+# Greedy identity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("spec_k,depth,ratio", [(1, 1, 0), (3, 1, 0),
+                                                (3, 2, 2)])
+def test_spec_greedy_identity(gemma, spec_k, depth, ratio):
+    """Speculative greedy output is token-for-token identical to plain
+    greedy decode for any spec_k and any draft (shallow or count-sketch-
+    compressed — acceptance varies, correctness must not), with decode
+    compiled exactly once."""
+    cfg, params = gemma
+    rng = np.random.RandomState(6)
+    lens = [5, 16, 9, 23]
+    reqs = _requests(cfg, rng, lens, max_new=5)
+    ref = {c.rid: c.tokens
+           for c in SlotScheduler(cfg, params,
+                                  serve=_serve(cfg)).run(list(reqs))}
+    sched = SlotScheduler(cfg, params, serve=_serve(
+        cfg, spec_k=spec_k, draft_depth=depth, draft_sketch_ratio=ratio))
+    done = {c.rid: c.tokens for c in sched.run(list(reqs))}
+    for r in reqs:
+        np.testing.assert_array_equal(done[r.rid], ref[r.rid],
+                                      err_msg=f"rid {r.rid}")
+    assert sched.decode_compilations == 1
+    assert sched.prefill_compilations == 1
+
+
+def test_spec_mixed_batch_identity(gemma):
+    """Mixed spec / non-spec (per-request spec_k=0) / sampled requests in
+    ONE stream share the single compiled chunk; every greedy request
+    still matches plain decode bitwise and the sampled request stays
+    in-vocab."""
+    cfg, params = gemma
+    rng = np.random.RandomState(7)
+    reqs = [Request(rid=0, tokens=rng.randint(0, cfg.vocab_size, (12,)
+                                              ).astype(np.int32),
+                    max_new=5),                          # speculates
+            Request(rid=1, tokens=rng.randint(0, cfg.vocab_size, (7,)
+                                              ).astype(np.int32),
+                    max_new=5, spec_k=0),                # plain greedy
+            Request(rid=2, tokens=rng.randint(0, cfg.vocab_size, (9,)
+                                              ).astype(np.int32),
+                    max_new=5, temperature=0.8, top_k=4, seed=3),
+            Request(rid=3, tokens=rng.randint(0, cfg.vocab_size, (19,)
+                                              ).astype(np.int32),
+                    max_new=5, spec_k=2)]                # clamped k
+    ref = {c.rid: c.tokens
+           for c in SlotScheduler(cfg, params, serve=_serve(
+               cfg, max_batch=3)).run(list(reqs))}
+    sched = SlotScheduler(cfg, params, serve=_serve(
+        cfg, max_batch=3, spec_k=3, draft_depth=1))
+    done = {c.rid: c.tokens for c in sched.run(list(reqs))}
+    assert sched.decode_compilations == 1
+    for r in reqs:
+        if (r.temperature or 0) == 0:
+            np.testing.assert_array_equal(done[r.rid], ref[r.rid],
+                                          err_msg=f"rid {r.rid}")
+    assert int(np.max(done[2])) < cfg.vocab_size
+
+
+def test_spec_budget_clip_identity(gemma):
+    """A request whose accepted run would overshoot its token budget is
+    clipped mid-round: exactly max_new tokens come back and they match
+    plain decode."""
+    cfg, params = gemma
+    rng = np.random.RandomState(8)
+    reqs = _requests(cfg, rng, [10, 6], max_new=3)
+    ref = {c.rid: c.tokens
+           for c in SlotScheduler(cfg, params,
+                                  serve=_serve(cfg)).run(list(reqs))}
+    sched = SlotScheduler(cfg, params,
+                          serve=_serve(cfg, spec_k=6, draft_depth=2))
+    done = {c.rid: c.tokens for c in sched.run(list(reqs))}
+    for r in reqs:
+        assert len(done[r.rid]) == 3
+        np.testing.assert_array_equal(done[r.rid], ref[r.rid])
+
+
+def test_spec_prefix_hit_identity_and_cow(gemma):
+    """The acceptance-criteria CoW test: a cached full-prompt prefix
+    entry's pool blocks (target AND draft pools) are bitwise unmodified
+    after a hitting slot speculates past them — the boundary block is
+    forked, never written in place — and the hit's output equals the
+    cold miss."""
+    cfg, params = gemma
+    sv = _serve(cfg, spec_k=3, draft_depth=1, admit_threshold=2)
+    sched = SlotScheduler(cfg, params, serve=sv)
+    rng = np.random.RandomState(9)
+    prompt = rng.randint(0, cfg.vocab_size, (32,)).astype(np.int32)
+    outs = [sched.run([Request(rid=i, tokens=prompt, max_new=6)])[0]
+            for i in range(2)]
+    key = tuple(int(t) for t in prompt)
+    ids = list(sched.prefix_cache._entries[key].block_ids)
+    assert len(ids) == 2                  # full 32-token prompt cached
+    snap = {(name, sub): np.asarray(pool[sub])[:, ids].copy()
+            for name, pool in (("kv", sched.state.cache["kv"]),
+                               ("draft", sched.state.cache["draft"]["kv"]))
+            for sub in ("k", "v")}
+    hit = sched.run([Request(rid=9, tokens=prompt, max_new=6)])[0]
+    assert hit.prefix_hit
+    np.testing.assert_array_equal(hit.tokens, outs[0].tokens)
+    for (name, pool) in (("kv", sched.state.cache["kv"]),
+                         ("draft", sched.state.cache["draft"]["kv"])):
+        for sub in ("k", "v"):
+            np.testing.assert_array_equal(
+                np.asarray(pool[sub])[:, ids], snap[(name, sub)],
+                err_msg=f"speculation mutated cached {name}/{sub} blocks")
+    # the hitting slot forked the boundary block: after it retired, only
+    # the cache holds the entry's blocks
+    assert all(int(sched.alloc.rc[b]) == 1 for b in ids)
+    assert sched.alloc.reserved == sched.prefix_cache.held_blocks()
+
+
+def test_spec_acceptance_ceiling(gemma):
+    """When the target's upper layers contribute nothing (zeroed
+    residual outputs), the truncated draft agrees with the target
+    exactly: every proposal is accepted and each round advances
+    spec_k + 1 tokens — verification and acceptance bookkeeping work."""
+    cfg, _ = gemma
+    cfg6 = dataclasses.replace(cfg, num_layers=4)
+    params = M.init_params(jax.random.PRNGKey(2), cfg6)
+    params["blocks"]["attn"]["wo"] = \
+        params["blocks"]["attn"]["wo"].at[1:].set(0)
+    params["blocks"]["ffn"]["w_down"] = \
+        params["blocks"]["ffn"]["w_down"].at[1:].set(0)
+    sched = SlotScheduler(cfg6, params, serve=_serve(
+        cfg6, spec_k=4, draft_depth=1, decode_chunk=2))
+    rng = np.random.RandomState(10)
+    sched.run(_requests(cfg6, rng, [10, 8], max_new=10))
+    assert sched.acceptance_rate == 1.0
+    assert sched.mean_accepted_run == 5.0
+
+
+def test_engine_spec_k_scalar_or_vector(gemma):
+    """ServeEngine.generate carries spec_k like temperature: scalar or
+    per-request vector, greedy outputs identical to a plain engine."""
+    cfg, params = gemma
+    scfg = dataclasses.replace(
+        cfg, serve=dataclasses.replace(cfg.serve, spec_k=3, draft_depth=1))
+    rng = np.random.RandomState(11)
+    prompts = jnp.asarray(rng.randint(0, cfg.vocab_size, (3, 12)),
+                          jnp.int32)
+    ref = ServeEngine(cfg, params, max_seq=96).generate(
+        prompts, max_new=5).tokens
+    eng = ServeEngine(scfg, params, max_seq=96)
+    got = eng.generate(prompts, max_new=5, spec_k=[3, 0, 2]).tokens
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    assert eng.decode_compilations == 1
+    got2 = eng.generate(prompts, max_new=5).tokens   # engine default k
+    np.testing.assert_array_equal(np.asarray(got2), np.asarray(ref))
+    assert eng.decode_compilations == 1
+
+
+def test_spec_state_pspecs(gemma):
+    """Speculative engine state placement: the draft's shallow pool takes
+    the same split-KV block-axis spec as the target pool, spec_k rides
+    the batch axis, and draft params get the weight-stationary TP map."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.shardings import draft_param_pspecs, serve_state_pspecs
+    from repro.models.sharding import decode_rules
+
+    cfg, params = gemma
+    sched = SlotScheduler(cfg, params, serve=_serve(
+        cfg, spec_k=2, draft_depth=1, draft_sketch_ratio=2))
+    rules = decode_rules(multi_pod=False, long_context=False)
+    specs = serve_state_pspecs(cfg, sched.state, rules)
+    assert specs.cache["kv"]["k"] == P(None, "model", None, None, None)
+    assert specs.cache["draft"]["kv"]["k"] == \
+        P(None, "model", None, None, None)
+    assert specs.spec_k == P(rules["batch"])
+    dspecs = draft_param_pspecs(sched.draft, rules)
+    # the FCS-sketched draft head (J, padded_vocab): vocab over "model",
+    # the small sketch dim replicated — the dense head's placement
+    assert dspecs["head"] == P(None, "model")
+    assert dspecs["blocks"]["attn"]["wq"] == P(None, None, "model")

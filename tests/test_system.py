@@ -4,7 +4,6 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.configs.base import SketchConfig
 from repro.configs.registry import reduced_config

@@ -1,7 +1,5 @@
 """Training substrate: optimizer behaviour, FCS gradient compression with
 error feedback, data determinism, checkpoint roundtrips."""
-import os
-import shutil
 
 import jax
 import jax.numpy as jnp
@@ -14,9 +12,7 @@ from repro.models import model as M
 from repro.train import checkpoint as ckpt
 from repro.train.data import make_batch
 from repro.train.grad_compress import (LeafCodec, _leaf_codecs,
-                                       compress_roundtrip,
-                                       init_error_feedback, sketch_leaf,
-                                       unsketch_leaf)
+                                       compress_roundtrip, sketch_leaf)
 from repro.train.loop import train
 from repro.train.optimizer import adamw_init, adamw_update
 
