@@ -31,7 +31,7 @@ import sys
 TRACKED = ("tok_s", "hit_rate", "kv_peak_reserved_bytes",
            "kv_peak_used_bytes", "kv_reduction", "cached_bytes",
            "sketch_bytes_ratio", "spec_speedup", "accept_rate",
-           "mean_accepted_run")
+           "mean_accepted_run", "kv_tail_bytes", "tail_cosine")
 
 
 def _load(path: str) -> dict:

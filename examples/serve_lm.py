@@ -14,6 +14,11 @@ single-layer stack) proposes ``spec_k`` tokens per round and the target
 verifies them all in one multi-query step; greedy output is bitwise the
 plain-decode output, and the acceptance rate tells you how much of the
 draft's work survived verification.
+Part 4 (attention families) turns on SKETCHED LONG-CONTEXT KV
+(``serve/kv_sketch.py``): each slot keeps only the most recent
+``kv_sketch_window`` rows as exact paged blocks; older blocks fold into
+per-slot FCS tail tables and return to the pool, so a slot decodes a
+context several times larger than its reserved blocks could hold.
 """
 import argparse
 import dataclasses
@@ -105,6 +110,26 @@ def main():
         print(f"[spec] acceptance rate {spec.acceptance_rate:.2f}, "
               f"mean accepted run {spec.mean_accepted_run:.2f} "
               f"tokens/round over {spec.spec_rounds} rounds")
+
+    # -- Part 4: sketched long-context KV ---------------------------------
+    # a small pool (10 blocks x 16 rows = 160 exact rows) serves a
+    # 400-token prompt: blocks aging past the 64-row window fold into the
+    # slot's FCS tail tables inside the compiled chunk and return to the
+    # pool, so reserved blocks track the WINDOW, not the context.
+    if cfg.family in KV_FAMILIES:
+        bs = cfg.serve.kv_block_size
+        lc_serve = dataclasses.replace(
+            cfg.serve, max_batch=1, max_seq=512, num_kv_blocks=10,
+            kv_sketch_window=4 * bs, admit_threshold=1 << 30)
+        lc = SlotScheduler(cfg, params, serve=lc_serve)
+        doc = rng.randint(0, cfg.vocab_size, (400,)).astype(np.int32)
+        done = lc.run([Request(rid=200, tokens=doc, max_new=8)])
+        pool_rows = lc.num_blocks * lc.block_size
+        print(f"[sketch] {len(doc)}-token context through a "
+              f"{pool_rows}-row pool: {done[0].tokens.tolist()}")
+        print(f"[sketch] tail tables {lc.kv_sketch_tail_bytes()}B fixed "
+              f"vs dense {lc.kv_dense_equiv_bytes()}B; "
+              f"decode compilations: {lc.decode_compilations}")
 
 
 if __name__ == "__main__":

@@ -108,6 +108,24 @@ class ServeConfig:
     swaps the draft's LM head for the FCS-sketched head (paper Section
     4.2 machinery) at the same ratio — the paper's compressed-forward
     recipe applied to drafting.  0 keeps the truncated weights dense.
+    ``kv_sketch_window``: > 0 turns on the sketched long-context KV
+    subsystem (attention families, ``serve/kv_sketch.py``): each slot
+    keeps this many recent tokens of EXACT paged KV; when a whole block
+    ages past the window it is folded into a per-slot, per-layer
+    count-sketch tail table (keys and values sketched along the sequence
+    axis with ``sketch/hashing.py`` rows) and freed back to the pool, so
+    a slot's pool reservation is bounded by the window, not the context.
+    Decode attention becomes two-span: exact over the window plus an
+    approximate tail contribution merged with online-softmax statistics.
+    Must be a multiple of ``kv_block_size``.  0 (default) disables the
+    subsystem entirely — the engine builds the classic exact graph.
+    Per-request ``Request.kv_sketch=False`` opts a request out (it then
+    reserves its full context exactly, as without the subsystem).
+    ``kv_sketch_ratio``: sequence-axis compression ratio of the tail
+    tables — each table row has ~max_seq/ratio columns (lane-aligned), so
+    tail bytes are ~2 * rows/ratio of the folded KV bytes.
+    ``kv_sketch_rows``: independent hash rows per tail table (median
+    combine width; the FCS D parameter applied to KV).
     """
 
     max_batch: int = 8
@@ -127,6 +145,9 @@ class ServeConfig:
     spec_k: int = 0
     draft_depth: int = 1
     draft_sketch_ratio: int = 0
+    kv_sketch_window: int = 0
+    kv_sketch_ratio: int = 8
+    kv_sketch_rows: int = 3
 
 
 # ---------------------------------------------------------------------------

@@ -21,6 +21,35 @@ def unsketch_ref(y: jax.Array, h: jax.Array, s: jax.Array) -> jax.Array:
     return y[:, h] * s[None, :].astype(y.dtype)
 
 
+def kv_tail_fold_ref(rows: jax.Array, positions: jax.Array,
+                     tail: jax.Array, coeffs: jax.Array) -> jax.Array:
+    """Oracle for kernels/kv_sketch.py:tail_fold, delegating to the serve
+    math (serve/kv_sketch.py:fold_rows) so the kernel is checked against
+    exactly what the engine computes.  rows: (N, D); positions: (N,);
+    tail: (Z, C, D).  -> new (Z, C, D) table."""
+    from repro.serve.kv_sketch import fold_rows
+    C = tail.shape[1]
+    # fold_rows speaks (B, n, K, hd): view D as K with hd == 1
+    r4 = rows[None, :, :, None]
+    acc = fold_rows(r4, r4, positions, coeffs, C)["k"][0, :, :, :, 0]
+    return tail + acc
+
+
+def kv_tail_scores_ref(q: jax.Array, tail_k: jax.Array, coeffs: jax.Array,
+                       T: int) -> jax.Array:
+    """Oracle for kernels/kv_sketch.py:tail_scores via the serve path's
+    precomputed signed position one-hot (serve/kv_sketch.py:pos_onehot —
+    same in-graph hashes as the kernel's on-the-fly tiles).
+    q: (N, D); tail_k: (Z, C, D).  -> (N, T) median-of-rows estimates."""
+    from repro.serve.kv_sketch import pos_onehot
+    C = tail_k.shape[1]
+    onehot = pos_onehot(coeffs, T, C)                       # (Z, T, C)
+    qa = jnp.einsum("nd,zcd->znc", q.astype(jnp.float32),
+                    tail_k.astype(jnp.float32))
+    est = jnp.einsum("znc,ztc->znt", qa, onehot)
+    return jnp.median(est, axis=0)
+
+
 def sketch_update_ref(g: jax.Array, m_table: jax.Array, v_table: jax.Array,
                       coeffs_m: jax.Array, coeffs_v: jax.Array,
                       b1: float, b2: float):

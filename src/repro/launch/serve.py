@@ -13,8 +13,12 @@ of the stream can be sampled (``--sampled-frac``) to exercise mixed
 greedy/sampled decoding in the one compiled chunk, and ``--spec-k`` turns
 on speculative decoding (a truncated / count-sketch-compressed draft
 proposes, the target verifies in one multi-query step; acceptance rate
-and mean accepted-run length are reported).  Runs on the reduced config
-by default; pass ``--full`` for the full architecture.
+and mean accepted-run length are reported).  ``--kv-sketch-window N``
+turns on sketched long-context KV: each slot keeps the most recent N
+rows exact and folds older blocks into per-slot FCS tail tables
+(``--long-context S`` appends one S-token demo prompt; the exact-window
+vs sketched-tail byte split is printed).  Runs on the reduced config by
+default; pass ``--full`` for the full architecture.
 """
 from __future__ import annotations
 
@@ -82,6 +86,17 @@ def main():
     ap.add_argument("--draft-sketch-ratio", type=int, default=0,
                     help="count-sketch-compress the draft weights at this "
                          "ratio (0 = dense truncated draft)")
+    ap.add_argument("--kv-sketch-window", type=int, default=0,
+                    help="exact recent-window rows per slot; older blocks "
+                         "fold into per-slot FCS tail tables and free "
+                         "(0 = whole context exact; attention families)")
+    ap.add_argument("--kv-sketch-ratio", type=int, default=8,
+                    help="seq-axis compression of the tail tables "
+                         "(cols ~ max_seq / ratio)")
+    ap.add_argument("--long-context", type=int, default=0,
+                    help="append one demo request with a prompt of this "
+                         "many tokens (exercises fold-through prefill "
+                         "and two-span decode; needs --kv-sketch-window)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--full", action="store_true",
                     help="run the full architecture (default: reduced)")
@@ -97,7 +112,9 @@ def main():
         cfg.serve, max_batch=args.max_batch, max_seq=args.max_seq,
         admit_threshold=args.admit_threshold, prefix_block=args.prefix_len,
         spec_k=args.spec_k, draft_depth=args.draft_depth,
-        draft_sketch_ratio=args.draft_sketch_ratio)
+        draft_sketch_ratio=args.draft_sketch_ratio,
+        kv_sketch_window=args.kv_sketch_window,
+        kv_sketch_ratio=args.kv_sketch_ratio)
     if args.spec_k and cfg.family not in KV_FAMILIES:
         print(f"note: --spec-k needs an attention family; {cfg.family!r} "
               f"decodes plainly")
@@ -108,6 +125,14 @@ def main():
                                sampled_frac=args.sampled_frac,
                                temperature=args.temperature,
                                top_k=args.top_k)
+    if args.long_context:
+        assert args.kv_sketch_window > 0, "--long-context needs a window"
+        S = min(args.long_context, args.max_seq - args.max_new)
+        rng_lc = np.random.RandomState(args.seed + 2)
+        reqs.append(Request(
+            rid=len(reqs),
+            tokens=rng_lc.randint(0, cfg.vocab_size, (S,)).astype(np.int32),
+            max_new=args.max_new))
 
     t0 = time.time()
     done = sched.run(reqs)
@@ -139,6 +164,15 @@ def main():
               f"peak_used={sched.kv_peak_used_bytes()}B vs dense "
               f"{sched.kv_dense_equiv_bytes()}B "
               f"({sched.kv_dense_equiv_bytes() / max(sched.kv_peak_reserved_bytes(), 1):.1f}x)")
+        if sched.sketch_on:
+            exact_b = sched.kv_sketch_exact_bytes()
+            tail_b = sched.kv_sketch_tail_bytes()
+            print(f"kv sketch: window={serve.kv_sketch_window} rows "
+                  f"(ratio={serve.kv_sketch_ratio}, "
+                  f"rows={serve.kv_sketch_rows}, "
+                  f"cols={sched.tail_cols}) — exact-window "
+                  f"{exact_b}B live + sketched-tail {tail_b}B fixed "
+                  f"vs dense {sched.kv_dense_equiv_bytes()}B")
     else:
         print(f"recurrent family ({cfg.family}): slot-scheduled state, "
               f"prefix cache n/a")

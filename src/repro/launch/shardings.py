@@ -300,12 +300,25 @@ def serve_state_pspecs(cfg: ModelConfig, state: Any,
         kb = rules.get("kv_blocks")
         pool = lambda sub: jax.tree.map(
             lambda a: P(None, kb, None, None, None), sub)
+        # FCS tail tables (L, B, slot-rows Z, cols C, K, hd): the bucket
+        # column axis takes the split-KV role the pool's block axis has —
+        # fold scatters and tail queries then stay local per shard and
+        # merge through the same head-output reduction as exact attention.
+        # tail_cols() lane-aligns C to a multiple of 16, so it divides the
+        # decode mesh's model axis.
+        tail_sp = lambda sub: jax.tree.map(
+            lambda a: P(None, b, None, kb, None, None), sub)
         cache_specs = {"kv": pool(state.cache["kv"])}
+        if "tail" in state.cache:
+            cache_specs["tail"] = tail_sp(state.cache["tail"])
         if "draft" in state.cache:
             # the speculative draft's shallow pool shares the target
             # pool's block geometry (same tables, same allocator), so it
             # takes the same split-KV block-axis placement
             cache_specs["draft"] = {"kv": pool(state.cache["draft"]["kv"])}
+            if "tail" in state.cache["draft"]:
+                cache_specs["draft"]["tail"] = tail_sp(
+                    state.cache["draft"]["tail"])
         tables = P(None, None)
     else:
         cache_specs = cache_pspecs(cfg, state.cache, rules)
@@ -320,6 +333,7 @@ def serve_state_pspecs(cfg: ModelConfig, state: Any,
         top_k=slot(state.top_k),
         keys=slot(state.keys),
         spec_k=slot(state.spec_k),
+        fold_base=slot(state.fold_base),
     )
 
 

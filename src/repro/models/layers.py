@@ -91,6 +91,35 @@ def _project_qkv(p: dict, x: jax.Array, cfg: ModelConfig):
     return q, k, v
 
 
+def _sketched_two_span(o, qg, kt, vt, win, tail, sketch, scale):
+    """Two-span long-context attention (serve/kv_sketch.py).
+
+    ``o`` is the exact-path attention output (B, Sq, K, R, hd) computed
+    with the legacy full causal mask; ``win`` is the exact-window
+    visibility mask (folded positions excluded), broadcastable to the
+    (B, K, R, Sq, Sk) score tensor.  Computes f32 online-softmax
+    statistics over the window span, queries the slot's FCS tail tables
+    for the folded span, merges the two, and selects the merged output
+    ONLY for slots that have folded anything — slots with fold_base == 0
+    keep ``o`` verbatim (elementwise where), which is the bitwise
+    regression anchor: window >= context runs match a sketch-free engine
+    exactly.  The window span always contains the query's own position,
+    so its statistics are never empty."""
+    # deferred: serve/__init__ -> engine -> scheduler -> transformer ->
+    # moe -> layers would otherwise cycle at import time
+    from repro.serve import kv_sketch as _kvs
+    fold_base = sketch["fold_base"]
+    sw = jnp.einsum("bqkrh,bskh->bkrqs", qg, kt).astype(jnp.float32) * scale
+    sw = jnp.where(win, sw, -1e30)
+    m_e, l_e, acc_e = _kvs.exact_span_stats(sw, vt, win)
+    m_t, l_t, acc_t = _kvs.tail_attend(qg, tail["k"], tail["v"],
+                                       sketch["onehot"], fold_base, scale)
+    merged = _kvs.merge_spans(m_e, l_e, acc_e, m_t, l_t, acc_t)
+    merged = merged.transpose(0, 3, 1, 2, 4).astype(o.dtype)  # (B,Sq,K,R,hd)
+    sel = (fold_base > 0)[:, None, None, None, None]
+    return jnp.where(sel, merged, o)
+
+
 def _gqa_scores_softmax_out(q, k, v, mask, scale):
     """q: (B,Sq,K,R,hd); k,v: (B,Sk,K,hd); mask: bool, broadcastable to
     the (B,K,R,Sq,Sk) score tensor, or None.
@@ -198,7 +227,9 @@ def _project_qkv_rope(p: dict, x: jax.Array, cfg: ModelConfig,
 
 def decode_attention(p: dict, x: jax.Array, cfg: ModelConfig,
                      cache: dict, index: jax.Array,
-                     tables: Optional[jax.Array] = None
+                     tables: Optional[jax.Array] = None,
+                     tail: Optional[dict] = None,
+                     sketch: Optional[dict] = None
                      ) -> Tuple[jax.Array, dict]:
     """Single-token decode against a KV cache.
 
@@ -219,7 +250,8 @@ def decode_attention(p: dict, x: jax.Array, cfg: ModelConfig,
     Returns (out (B,1,d), updated cache).
     """
     if tables is not None:
-        return _paged_decode_attention(p, x, cfg, cache, index, tables)
+        return _paged_decode_attention(p, x, cfg, cache, index, tables,
+                                       tail, sketch)
     B, one, _ = x.shape
     hd = cfg.resolved_head_dim
     H, K = cfg.num_heads, cfg.num_kv_heads
@@ -254,9 +286,14 @@ def decode_attention(p: dict, x: jax.Array, cfg: ModelConfig,
 
 def _paged_decode_attention(p: dict, x: jax.Array, cfg: ModelConfig,
                             cache: dict, index: jax.Array,
-                            tables: jax.Array) -> Tuple[jax.Array, dict]:
+                            tables: jax.Array,
+                            tail: Optional[dict] = None,
+                            sketch: Optional[dict] = None
+                            ) -> Tuple[jax.Array, dict]:
     """Paged single-token decode: scatter each slot's new KV row through
-    its block table, gather its blocks, attend.  See decode_attention."""
+    its block table, gather its blocks, attend.  See decode_attention.
+    With ``tail``/``sketch`` (serve/kv_sketch.py) the attention becomes
+    two-span: exact over [fold_base, index], sketched over [0, fold_base)."""
     B, _, _ = x.shape
     hd = cfg.resolved_head_dim
     H, K = cfg.num_heads, cfg.num_kv_heads
@@ -287,14 +324,21 @@ def _paged_decode_attention(p: dict, x: jax.Array, cfg: ModelConfig,
     mask = (jnp.arange(S)[None, :] <= index[:, None]
             )[:, None, None, None, :]                    # (B,1,1,1,S)
     qg = q.reshape(B, 1, K, R, hd)
-    o = _gqa_scores_softmax_out(qg, kt, vt, mask, 1.0 / math.sqrt(hd))
+    scale = 1.0 / math.sqrt(hd)
+    o = _gqa_scores_softmax_out(qg, kt, vt, mask, scale)
+    if tail is not None:
+        win = mask & (jnp.arange(S)[None, :]
+                      >= sketch["fold_base"][:, None])[:, None, None, None, :]
+        o = _sketched_two_span(o, qg, kt, vt, win, tail, sketch, scale)
     o = o.reshape(B, 1, H * hd)
     out = jnp.einsum("bsh,hd->bsd", o, p["wo"])
     return out, {"k": k, "v": v}
 
 
 def verify_attention(p: dict, x: jax.Array, cfg: ModelConfig,
-                     cache: dict, index: jax.Array, tables: jax.Array
+                     cache: dict, index: jax.Array, tables: jax.Array,
+                     tail: Optional[dict] = None,
+                     sketch: Optional[dict] = None
                      ) -> Tuple[jax.Array, dict]:
     """Multi-query paged decode (speculative verify).
 
@@ -340,14 +384,21 @@ def verify_attention(p: dict, x: jax.Array, cfg: ModelConfig,
     mask = (jnp.arange(S)[None, None, :] <= positions[:, :, None]
             )[:, None, None]                             # (B,1,1,C,S)
     qg = q.reshape(B, C, K, R, hd)
-    o = _gqa_scores_softmax_out(qg, kt, vt, mask, 1.0 / math.sqrt(hd))
+    scale = 1.0 / math.sqrt(hd)
+    o = _gqa_scores_softmax_out(qg, kt, vt, mask, scale)
+    if tail is not None:
+        win = mask & (jnp.arange(S)[None, :] >= sketch["fold_base"][:, None]
+                      )[:, None, None, None, :]
+        o = _sketched_two_span(o, qg, kt, vt, win, tail, sketch, scale)
     o = o.reshape(B, C, H * hd)
     out = jnp.einsum("bsh,hd->bsd", o, p["wo"])
     return out, {"k": k, "v": v}
 
 
 def chunk_attention(p: dict, x: jax.Array, cfg: ModelConfig,
-                    cache: dict, table: jax.Array, start: jax.Array
+                    cache: dict, table: jax.Array, start: jax.Array,
+                    tail: Optional[dict] = None,
+                    sketch: Optional[dict] = None
                     ) -> Tuple[jax.Array, dict]:
     """Multi-token chunk against the paged slot KV (chunked prefill).
 
@@ -389,7 +440,12 @@ def chunk_attention(p: dict, x: jax.Array, cfg: ModelConfig,
     # iff j <= start + i (earlier chunks / shared prefix blocks included)
     mask = (jnp.arange(S)[None, :] <= positions[:, None])[None, None, None]
     qg = q.reshape(1, C, K, R, hd)
-    o = _gqa_scores_softmax_out(qg, ks, vs, mask, 1.0 / math.sqrt(hd))
+    scale = 1.0 / math.sqrt(hd)
+    o = _gqa_scores_softmax_out(qg, ks, vs, mask, scale)
+    if tail is not None:
+        win = mask & (jnp.arange(S)[None, :] >= sketch["fold_base"][:, None]
+                      )[:, None, None, None, :]
+        o = _sketched_two_span(o, qg, ks, vs, win, tail, sketch, scale)
     o = o.reshape(1, C, H * hd)
     out = jnp.einsum("bsh,hd->bsd", o, p["wo"])
     return out, {"k": k, "v": v}

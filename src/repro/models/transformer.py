@@ -104,19 +104,24 @@ def _init_blocks(key: jax.Array, cfg: ModelConfig) -> Params:
 
 
 def _dense_block(p_l, x, cfg: ModelConfig, positions, cache_l, index, mode,
-                 tables=None):
-    """One attention+FFN (or attention+MoE) block. Returns (x, aux, cache)."""
+                 tables=None, tail_l=None, sketch=None):
+    """One attention+FFN (or attention+MoE) block. Returns (x, aux, cache).
+    ``tail_l``/``sketch``: per-layer FCS tail tables + fold state for
+    two-span long-context decode (serve/kv_sketch.py); read-only here."""
     h = ly.rms_norm(x, p_l["norm1"], cfg.norm_eps)
     new_cache = None
     if mode == "decode":
         a, new_cache = ly.decode_attention(p_l["attn"], h, cfg, cache_l,
-                                           index, tables=tables)
+                                           index, tables=tables,
+                                           tail=tail_l, sketch=sketch)
     elif mode == "verify":
         a, new_cache = ly.verify_attention(p_l["attn"], h, cfg, cache_l,
-                                           index, tables)
+                                           index, tables, tail=tail_l,
+                                           sketch=sketch)
     elif mode == "chunk":
         a, new_cache = ly.chunk_attention(p_l["attn"], h, cfg, cache_l,
-                                          tables, index)
+                                          tables, index, tail=tail_l,
+                                          sketch=sketch)
     else:
         a = ly.causal_attention(p_l["attn"], h, cfg, positions)
         if mode == "prefill":
@@ -143,9 +148,14 @@ def _dense_block(p_l, x, cfg: ModelConfig, positions, cache_l, index, mode,
 def forward(params: Params, x: jax.Array, cfg: ModelConfig,
             mode: str = "train", cache: Optional[dict] = None,
             index: Optional[jax.Array] = None,
-            tables: Optional[jax.Array] = None
+            tables: Optional[jax.Array] = None,
+            sketch: Optional[dict] = None
             ) -> Tuple[jax.Array, jax.Array, Optional[dict]]:
     """x: embedded inputs (B, S, d).  Returns (hidden, aux_loss, cache).
+
+    ``sketch`` (attention families, paged modes only): {"fold_base": (B,)
+    int32, "onehot": (Z, T, C)} — enables two-span decode against the
+    cache's "tail" FCS tables (serve/kv_sketch.py).
 
     Modes: "train" / "prefill" (full-sequence), "decode" (single token per
     slot against the cache — paged through per-slot block ``tables`` when
@@ -168,7 +178,8 @@ def forward(params: Params, x: jax.Array, cfg: ModelConfig,
     fam = cfg.family
     if fam in ("dense", "audio", "vlm", "moe"):
         y, aux, new_cache = _forward_attn_stack(params, x, cfg, positions,
-                                                mode, cache, index, tables)
+                                                mode, cache, index, tables,
+                                                sketch)
     elif mode in ("chunk", "verify"):
         raise ValueError(f"mode {mode!r} needs a kv-cache family, "
                          f"got {fam!r}")
@@ -184,20 +195,30 @@ def forward(params: Params, x: jax.Array, cfg: ModelConfig,
 
 
 def _forward_attn_stack(params, x, cfg, positions, mode, cache, index,
-                        tables=None):
+                        tables=None, sketch=None):
     blocks = params["blocks"]
 
     if mode in ("decode", "chunk", "verify"):
+        sketched = sketch is not None and "tail" in (cache or {})
+
         def body(carry, xs):
             h, aux = carry
-            p_l, c_l = xs
+            p_l, c_l = xs[0], xs[1]
+            t_l = xs[2] if sketched else None
             h, a, nc = _dense_block(p_l, h, cfg, positions, c_l, index, mode,
-                                    tables)
+                                    tables, tail_l=t_l, sketch=sketch)
             return (h, aux + a), nc
 
+        xs = ((blocks, cache["kv"], cache["tail"]) if sketched
+              else (blocks, cache["kv"]))
         (y, aux), kv = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
-                                    (blocks, cache["kv"]))
-        return y, aux, {"kv": kv}
+                                    xs)
+        new_cache = {"kv": kv}
+        if "tail" in (cache or {}):
+            # tail tables are read-only inside the stack (folds happen in
+            # the serve chunk, outside forward) — reattach unchanged
+            new_cache["tail"] = cache["tail"]
+        return y, aux, new_cache
 
     @functools.partial(jax.checkpoint,
                        policy=jax.checkpoint_policies.nothing_saveable)
@@ -402,20 +423,23 @@ def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
 
 def decode_step(params: Params, cache: dict, tokens: jax.Array,
                 index: jax.Array, cfg: ModelConfig,
-                tables: Optional[jax.Array] = None
+                tables: Optional[jax.Array] = None,
+                sketch: Optional[dict] = None
                 ) -> Tuple[jax.Array, dict]:
     """tokens: (B, 1) int32.  Returns (logits (B, Vp) f32, new cache).
     ``tables``: optional (B, blocks_per_slot) block tables — paged-KV
-    decode for attention families (dense slot cache otherwise)."""
+    decode for attention families (dense slot cache otherwise).
+    ``sketch``: optional two-span long-context state (see forward)."""
     x = ly.embed_tokens(params["embed"], tokens)
     y, _, new_cache = forward(params, x, cfg, mode="decode", cache=cache,
-                              index=index, tables=tables)
+                              index=index, tables=tables, sketch=sketch)
     logits = ly.logits_fn(params, y, cfg)[:, 0]
     return logits, new_cache
 
 
 def verify_step(params: Params, cache: dict, tokens: jax.Array,
-                index: jax.Array, cfg: ModelConfig, tables: jax.Array
+                index: jax.Array, cfg: ModelConfig, tables: jax.Array,
+                sketch: Optional[dict] = None
                 ) -> Tuple[jax.Array, dict]:
     """Speculative-decode verification: score C tokens per slot in ONE
     compiled multi-query decode against the paged pool.
@@ -433,7 +457,7 @@ def verify_step(params: Params, cache: dict, tokens: jax.Array,
     """
     x = ly.embed_tokens(params["embed"], tokens)
     y, _, new_cache = forward(params, x, cfg, mode="verify", cache=cache,
-                              index=index, tables=tables)
+                              index=index, tables=tables, sketch=sketch)
     logits = ly.logits_fn(params, y, cfg)
     return logits, new_cache
 
@@ -448,8 +472,8 @@ def prefill(params: Params, batch: dict, cfg: ModelConfig
 
 
 def prefill_chunk(params: Params, cache: dict, tokens: jax.Array,
-                  table: jax.Array, start: jax.Array, cfg: ModelConfig
-                  ) -> dict:
+                  table: jax.Array, start: jax.Array, cfg: ModelConfig,
+                  sketch: Optional[dict] = None) -> dict:
     """Chunked prefill step: write KV rows for absolute positions
     [start, start + C) into the paged pool through the slot's
     (blocks_per_slot,) block-table row ``table``, attending the chunk
@@ -467,5 +491,5 @@ def prefill_chunk(params: Params, cache: dict, tokens: jax.Array,
     """
     x = ly.embed_tokens(params["embed"], tokens)
     _, _, new_cache = forward(params, x, cfg, mode="chunk", cache=cache,
-                              index=start, tables=table)
+                              index=start, tables=table, sketch=sketch)
     return new_cache

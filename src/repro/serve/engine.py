@@ -97,7 +97,8 @@ class ServeEngine:
     def generate(self, tokens: jax.Array, max_new: int = 32,
                  temperature: Per = 0.0, top_k: Per = 0,
                  key: Optional[jax.Array] = None,
-                 spec_k: Optional[Per] = None) -> GenerationResult:
+                 spec_k: Optional[Per] = None,
+                 kv_sketch: Optional[Per] = None) -> GenerationResult:
         """tokens: (B, S) prompt ids.  ``temperature`` / ``top_k`` /
         ``spec_k`` may be scalars or per-request length-B vectors; a
         request is greedy when its temperature is 0.  When sampling and
@@ -107,7 +108,10 @@ class ServeEngine:
         to ``cfg.serve.spec_k`` and is clamped to it: speculation only
         runs when the engine was built with a draft (spec_k > 0 in the
         serve config), but individual requests may opt down to plain
-        decode with spec_k=0."""
+        decode with spec_k=0.  ``kv_sketch`` (scalar or per-request
+        bools) opts requests OUT of long-context KV sketching on engines
+        built with ``cfg.serve.kv_sketch_window > 0`` — a False keeps
+        that request's whole context exact."""
         B, S = tokens.shape
         assert S + max_new <= self.max_seq
         sched = self._scheduler(B)
@@ -115,6 +119,8 @@ class ServeEngine:
         ks = _per_request(top_k, B, "top_k")
         sks = (None if spec_k is None
                else _per_request(spec_k, B, "spec_k"))
+        kss = (None if kv_sketch is None
+               else _per_request(kv_sketch, B, "kv_sketch"))
         prompts = np.asarray(tokens, np.int32)
         reqs = []
         for b in range(B):
@@ -128,7 +134,9 @@ class ServeEngine:
                                 temperature=float(temps[b]),
                                 top_k=int(ks[b]), key=rk,
                                 spec_k=(None if sks is None
-                                        else int(sks[b]))))
+                                        else int(sks[b])),
+                                kv_sketch=(None if kss is None
+                                           else bool(kss[b]))))
             self._rid += 1
         done = {c.rid: c for c in sched.run(reqs)}
         out = np.stack([done[r.rid].tokens for r in reqs])

@@ -205,6 +205,16 @@ class SketchPrefixCache:
         bb = self.allocator.block_bytes
         if len(block_ids) * bb > self.cfg.prefix_cache_bytes:
             return                   # one entry can never fit: don't thrash
+        # every admitted block must still be LIVE (held by the admitting
+        # slot): a freed block id would be ref'd back to life here while
+        # the allocator hands the same block to someone else — the cache
+        # would then serve rows another slot is overwriting.  Sketched
+        # slots fold-and-free leading prompt blocks, so the scheduler
+        # must skip admission for them rather than trip this.
+        rc = self.allocator.rc
+        assert all(int(rc[b]) >= 1 for b in block_ids), (
+            "prefix-cache admit of freed block(s): "
+            f"{[b for b in block_ids if int(rc[b]) < 1]}")
         self.allocator.ref(block_ids)
         for b in block_ids:
             self._held[b] = self._held.get(b, 0) + 1

@@ -104,6 +104,7 @@ import numpy as np
 from repro.configs.base import ModelConfig, ServeConfig
 from repro.models import transformer as tf
 from repro.models.draft import Draft, make_draft
+from repro.serve import kv_sketch as kvs
 from repro.serve.prefix_cache import SketchPrefixCache
 from repro.serve.speculative import build_spec_chunk
 
@@ -128,6 +129,10 @@ class Request:
     # (cfg.serve.spec_k); clamped to the engine max; 0 = plain decode for
     # this request even inside a speculative engine.
     spec_k: Optional[int] = None
+    # sketched long-context KV (serve/kv_sketch.py): None follows the
+    # engine (on when cfg.serve.kv_sketch_window > 0); False opts this
+    # request out — it reserves full exact coverage and never folds.
+    kv_sketch: Optional[bool] = None
 
 
 @dataclass
@@ -222,6 +227,8 @@ class DecodeState(NamedTuple):
     top_k: jax.Array             # (B,)  top-k cutoff per slot (0 = off)
     keys: jax.Array              # (B, 2) per-slot sampling PRNG keys
     spec_k: jax.Array            # (B,)  speculative proposals per round
+    fold_base: jax.Array         # (B,)  rows folded into the slot's FCS
+                                 # tail (0 = nothing folded, pure exact)
 
 
 class SlotScheduler:
@@ -261,6 +268,11 @@ class SlotScheduler:
         # scheduler round and spuriously cross admit_threshold)
         self._admit_memo: Dict[int, Optional[int]] = {}
         self._slot_rows: List[int] = [0] * B
+        # sketched long-context KV bookkeeping (host mirrors of the
+        # device fold_base): first live logical block per slot, and
+        # whether the slot's request opted into folding
+        self._slot_first_lblk: List[int] = [0] * B
+        self._slot_use_sketch: List[bool] = [False] * B
         self._used_rows = 0
         self.peak_used_rows = 0
         self.decode_steps = 0
@@ -292,12 +304,42 @@ class SlotScheduler:
                 cache = dict(cache)
                 cache["draft"] = tf.init_paged_cache(
                     self.draft.cfg, nb, self.block_size)
+            # block_bytes derive from the POOL leaves only — the FCS tail
+            # tables added below are per-slot constant state, not paged
             pool_bytes = sum(int(a.size) * int(a.dtype.itemsize)
                              for a in jax.tree.leaves(cache))
             self.alloc = BlockAllocator(nb, pool_bytes // nb)
             self.prefix_cache = SketchPrefixCache(
                 sv, allocator=self.alloc, block_size=self.block_size)
             tables0 = jnp.full((B, self.blocks_per_slot), nb, jnp.int32)
+            self.sketch_on = bool(sv.kv_sketch_window)
+            if self.sketch_on:
+                W = int(sv.kv_sketch_window)
+                bs = self.block_size
+                assert W % bs == 0 and W >= bs, (
+                    f"kv_sketch_window {W} must be a positive multiple of "
+                    f"kv_block_size {bs}")
+                self.kv_window = W
+                Z = max(1, int(sv.kv_sketch_rows))
+                ratio = max(1, int(sv.kv_sketch_ratio))
+                T = kvs.pos_domain(sv.max_seq, bs)
+                C = kvs.tail_cols(sv.max_seq, ratio)
+                self.tail_rows, self.tail_cols, self.tail_domain = Z, C, T
+                self.tail_coeffs = kvs.tail_coeffs(sv)
+                self.tail_onehot = kvs.pos_onehot(self.tail_coeffs, T, C)
+                # max committed-position advance per decode chunk; the
+                # in-chunk fold cap keeps pace with it (+1 block of slack
+                # so a lagging slot catches up instead of drifting)
+                self.adv_max = sv.decode_chunk * (self.spec_max + 1)
+                self.fold_cap = bs * (-(-self.adv_max // bs) + 1)
+                bucket = max(1, min(sv.prefill_bucket, sv.max_seq))
+                self.prefill_fold_cap = bs * (bucket // bs + 1)
+                cache = dict(cache)
+                cache["tail"] = kvs.init_tail(cfg, B, Z, C)
+                if self.draft is not None:
+                    cache["draft"] = dict(cache["draft"])
+                    cache["draft"]["tail"] = kvs.init_tail(
+                        self.draft.cfg, B, Z, C)
         else:
             # prefix reuse / paging are KV-cache concepts; a recurrent
             # scheduler gets neither (and misuse fails loudly on None)
@@ -307,6 +349,7 @@ class SlotScheduler:
             self.spec_overhang = 0
             self.alloc = None
             self.prefix_cache = None
+            self.sketch_on = False    # recurrent state never pages or folds
             cache = tf.init_cache(cfg, B, sv.max_seq)
             tables0 = jnp.zeros((B, 0), jnp.int32)
 
@@ -320,6 +363,7 @@ class SlotScheduler:
             top_k=jnp.zeros((B,), jnp.int32),
             keys=jnp.zeros((B, 2), jnp.uint32),
             spec_k=jnp.zeros((B,), jnp.int32),
+            fold_base=jnp.zeros((B,), jnp.int32),
         )
         if self.spec_max > 0:
             self._chunk_fn = jax.jit(self._make_spec_chunk(),
@@ -328,13 +372,27 @@ class SlotScheduler:
             self._chunk_fn = jax.jit(self._make_chunk(),
                                      donate_argnums=(1,))
         if self.is_kv:
-            self._prefill_chunk = jax.jit(
-                functools.partial(tf.prefill_chunk, cfg=cfg),
-                donate_argnums=(1,))
-            if self.draft is not None:
-                self._draft_prefill_chunk = jax.jit(
-                    functools.partial(tf.prefill_chunk, cfg=self.draft.cfg),
+            if self.sketch_on:
+                # every slot of a sketch engine prefills through the
+                # sketched chunk (fold_base == 0 reproduces the exact
+                # graph bitwise), so prefill still compiles exactly once
+                self._prefill_chunk = self._make_sketch_prefill(cfg, False)
+                if self.draft is not None:
+                    self._draft_prefill_chunk = self._make_sketch_prefill(
+                        self.draft.cfg, True)
+                self._fold_fn = jax.jit(self._make_fold(),
+                                        donate_argnums=(0,))
+                self._zero_tail = jax.jit(self._make_zero_tail(),
+                                          donate_argnums=(0,))
+            else:
+                self._prefill_chunk = jax.jit(
+                    functools.partial(tf.prefill_chunk, cfg=cfg),
                     donate_argnums=(1,))
+                if self.draft is not None:
+                    self._draft_prefill_chunk = jax.jit(
+                        functools.partial(tf.prefill_chunk,
+                                          cfg=self.draft.cfg),
+                        donate_argnums=(1,))
             # copy-on-write block fork: copy one physical block's rows
             # (target AND draft pools) to a fresh block, device-side
             self._copy_block = jax.jit(
@@ -393,6 +451,10 @@ class SlotScheduler:
         chunk = self.serve.decode_chunk
         is_kv = self.is_kv
         sample = self._make_sampler()
+        sketch_on = self.sketch_on
+        if sketch_on:
+            onehot, coeffs = self.tail_onehot, self.tail_coeffs
+            fold_cap = self.fold_cap
 
         def chunk_fn(params, state: DecodeState):
             temp, top_k = state.temp, state.top_k
@@ -420,19 +482,134 @@ class SlotScheduler:
             new_state = DecodeState(cache=cache, tables=state.tables,
                                     cur=cur, pos=pos, remaining=remaining,
                                     temp=temp, top_k=top_k, keys=keys,
-                                    spec_k=state.spec_k)
+                                    spec_k=state.spec_k,
+                                    fold_base=state.fold_base)
             return new_state, toks, emits        # toks/emits: (chunk, B)
 
-        return chunk_fn
+        def sketched_chunk_fn(params, state: DecodeState, fold_len):
+            """Sketch-engine chunk: fold aged blocks into the FCS tails
+            ONCE at chunk start (fold_len (B,) rows per slot, decided by
+            the host from committed positions), then run the usual scan
+            with two-span decode.  Folded positions sit strictly below
+            the window every in-chunk query keeps exact, so folding
+            before the steps is equivalent to folding between them —
+            and it keeps the fold out of the scan body."""
+            temp, top_k = state.temp, state.top_k
+            tables = state.tables
+            cache = state.cache
+            tail = kvs.fold_pool(cache["kv"], cache["tail"], tables,
+                                 state.fold_base, fold_len, coeffs,
+                                 fold_cap)
+            cache = {**cache, "tail": tail}
+            fold_base = state.fold_base + fold_len
+            sk = {"fold_base": fold_base, "onehot": onehot}
+
+            def step(carry, _):
+                cache, cur, pos, remaining, keys = carry
+                running = remaining > 0
+                logits, cache = tf.decode_step(params, cache, cur, pos, cfg,
+                                               tables=tables, sketch=sk)
+                lg = logits[:, :cfg.vocab_size].astype(jnp.float32)
+                keys, nxt = sample(keys, lg, temp, top_k)
+                nxt = nxt.astype(jnp.int32)
+                pos = pos + running.astype(jnp.int32)
+                remaining = remaining - running.astype(jnp.int32)
+                return (cache, nxt[:, None], pos, remaining, keys), \
+                    (nxt, running)
+
+            carry = (cache, state.cur, state.pos, state.remaining,
+                     state.keys)
+            (cache, cur, pos, remaining, keys), (toks, emits) = \
+                jax.lax.scan(step, carry, None, length=chunk)
+            new_state = DecodeState(cache=cache, tables=state.tables,
+                                    cur=cur, pos=pos, remaining=remaining,
+                                    temp=temp, top_k=top_k, keys=keys,
+                                    spec_k=state.spec_k,
+                                    fold_base=fold_base)
+            return new_state, toks, emits
+
+        return sketched_chunk_fn if sketch_on else chunk_fn
 
     def _make_spec_chunk(self):
         """Speculative decode chunk (serve/speculative.py): rounds of
         draft-propose -> verify-all -> accept/rollback, ONE compilation
         for the engine's lifetime; mixed spec / non-spec / sampled slots
         share it."""
+        sketch = None
+        if self.sketch_on:
+            sketch = {"onehot": self.tail_onehot,
+                      "coeffs": self.tail_coeffs,
+                      "fold_cap": self.fold_cap}
         return build_spec_chunk(self.cfg, self.draft.cfg,
                                 self.serve.decode_chunk, self.spec_max,
-                                self._make_sampler())
+                                self._make_sampler(), sketch=sketch)
+
+    def _make_sketch_prefill(self, model_cfg: ModelConfig, is_draft: bool):
+        """Jitted sketched prefill chunk: the legacy chunk plus the
+        slot's tail slice and fold offset, so prompts longer than the
+        window attend their already-folded span.  slot / fold_base are
+        traced — one compilation covers every slot and fold state; with
+        fold_base == 0 the produced pool rows are bitwise the legacy
+        chunk's (the two-span select picks the exact output and the KV
+        scatter is untouched)."""
+        onehot = self.tail_onehot
+
+        def spc(params, pool, tail_full, tok, table, start, slot,
+                fold_base):
+            tail = jax.tree.map(
+                lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1),
+                tail_full)
+            sk = {"fold_base": fold_base[None], "onehot": onehot}
+            nc = tf.prefill_chunk(params, {"kv": pool, "tail": tail}, tok,
+                                  table, start, model_cfg, sketch=sk)
+            return nc["kv"]
+
+        return jax.jit(spc, donate_argnums=(1,))
+
+    def _make_fold(self):
+        """Jitted out-of-chunk fold (prefill fold-through): fold the next
+        ``fold_len`` aged rows of ONE slot — target and draft pools alike
+        — into its tail tables.  Separate from the decode chunk (and
+        compiled once), because prefill folds happen between prefill
+        chunks, before the slot ever decodes."""
+        coeffs = self.tail_coeffs
+        cap = self.prefill_fold_cap
+
+        def fold_fn(cache, row, fold_from, fold_len, slot):
+            ff, fl = fold_from[None], fold_len[None]       # (1,)
+
+            def one(pool, tail_full):
+                t1 = jax.tree.map(
+                    lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1,
+                                                           axis=1),
+                    tail_full)
+                t1 = kvs.fold_pool(pool, t1, row[None], ff, fl, coeffs,
+                                   cap)
+                return jax.tree.map(
+                    lambda full, s: jax.lax.dynamic_update_slice_in_dim(
+                        full, s, slot, axis=1), tail_full, t1)
+
+            out = {**cache, "tail": one(cache["kv"], cache["tail"])}
+            if "draft" in cache:
+                d = cache["draft"]
+                out["draft"] = {**d, "tail": one(d["kv"], d["tail"])}
+            return out
+
+        return fold_fn
+
+    def _make_zero_tail(self):
+        """Jitted per-slot tail reset (slot admission): a new occupant
+        must never attend the previous request's folded content."""
+        def zt(cache, slot):
+            z = lambda t: jax.tree.map(
+                lambda a: a.at[:, slot].set(0.0), t)
+            out = {**cache, "tail": z(cache["tail"])}
+            if "draft" in cache:
+                out["draft"] = {**cache["draft"],
+                                "tail": z(cache["draft"]["tail"])}
+            return out
+
+        return zt
 
     @staticmethod
     def _insert_state(cache, block, slot):
@@ -463,10 +640,19 @@ class SlotScheduler:
             # reject up front what the pool can never serve — otherwise
             # the impossible request head-of-line-blocks the FIFO queue
             # and only fails once every in-flight slot has drained
-            need = -(-(S + req.max_new + self.spec_overhang)
-                     // self.block_size)
+            bs = self.block_size
+            need = -(-(S + req.max_new + self.spec_overhang) // bs)
+            if self.sketch_on and req.kv_sketch is not False:
+                # a sketched request never holds its whole context: its
+                # peak is the exact window + one prefill bucket of write
+                # frontier + one chunk of decode lookahead
+                bucket = max(1, min(sv.prefill_bucket, sv.max_seq))
+                peak = (self.kv_window // bs + -(-bucket // bs)
+                        + -(-(self.adv_max + self.spec_overhang) // bs)
+                        + 2)
+                need = min(need, peak)
             assert need <= self.num_blocks, (
-                f"request needs {need} KV blocks of {self.block_size}, "
+                f"request needs {need} KV blocks of {bs}, "
                 f"pool has {self.num_blocks} (raise "
                 f"cfg.serve.num_kv_blocks)")
         self._queue.append(req)
@@ -486,8 +672,40 @@ class SlotScheduler:
             return jax.random.PRNGKey(req.seed)
         return jax.random.fold_in(self._base_key, req.rid)
 
+    def _prefill_one(self, cache, tok: jax.Array, table: jax.Array,
+                     off: int, slot: int, fold_base: int):
+        """One prefill chunk through the target (and lockstep draft)
+        pool.  In a sketch engine the sketched chunk is used for EVERY
+        slot — with fold_base == 0 it writes bitwise the legacy rows —
+        so prefill keeps compiling exactly once per engine."""
+        if self.sketch_on:
+            kv = self._prefill_chunk(self.params, cache["kv"],
+                                     cache["tail"], tok, table,
+                                     jnp.int32(off), jnp.int32(slot),
+                                     jnp.int32(fold_base))
+            cache = {**cache, "kv": kv}
+            if self.draft is not None:
+                dkv = self._draft_prefill_chunk(
+                    self.draft.params, cache["draft"]["kv"],
+                    cache["draft"]["tail"], tok, table, jnp.int32(off),
+                    jnp.int32(slot), jnp.int32(fold_base))
+                cache = {**cache, "draft": {**cache["draft"], "kv": dkv}}
+            return cache
+        kv = self._prefill_chunk(self.params, {"kv": cache["kv"]},
+                                 tok, table, jnp.int32(off))
+        cache = {**cache, "kv": kv["kv"]}
+        if self.draft is not None:
+            # the draft pool prefills in lockstep through the same
+            # table, so cached-prefix blocks hold BOTH models' rows
+            dkv = self._draft_prefill_chunk(
+                self.draft.params, cache["draft"], tok, table,
+                jnp.int32(off))
+            cache = {**cache, "draft": dkv}
+        return cache
+
     def _chunk_prefill_loop(self, cache, prompt: np.ndarray,
-                            table: jax.Array, start_off: int):
+                            table: jax.Array, start_off: int,
+                            slot: int = 0):
         """Feed prompt rows [start_off, S) through bucket-sized prefill
         chunks.  Starts are ALWAYS absolute bucket multiples — no tail
         clamp — so the chunk boundaries (and hence the cache rows) are
@@ -505,19 +723,73 @@ class SlotScheduler:
             seg = prompt[off:off + bucket]
             tok = np.zeros((1, bucket), np.int32)
             tok[0, :len(seg)] = seg
-            tok = jnp.asarray(tok)
-            kv = self._prefill_chunk(self.params, {"kv": cache["kv"]},
-                                     tok, table, jnp.int32(off))
-            cache = {**cache, "kv": kv["kv"]}
-            if self.draft is not None:
-                # the draft pool prefills in lockstep through the same
-                # table, so cached-prefix blocks hold BOTH models' rows
-                dkv = self._draft_prefill_chunk(
-                    self.draft.params, cache["draft"], tok, table,
-                    jnp.int32(off))
-                cache = {**cache, "draft": dkv}
+            cache = self._prefill_one(cache, jnp.asarray(tok), table, off,
+                                      slot, 0)
             off += bucket
         return cache
+
+    def _sketch_prefill_admit(self, slot: int, cache, prompt: np.ndarray,
+                              shared: List[int], start_off: int):
+        """Fold-through chunked prefill for a SKETCHED request: blocks
+        allocate lazily just ahead of the write frontier, and blocks that
+        age fully past the exact window fold into the slot's tail tables
+        and return to the pool — a prompt's peak block hold is the window
+        plus one prefill bucket, independent of its length.
+
+        Returns (cache, slot_ids, first_lblk, ok); ``slot_ids`` are the
+        blocks still held (logical blocks [first_lblk, ...)), already
+        unreffed on failure (ok False -> caller defers the admission).
+        """
+        sv = self.serve
+        bs = self.block_size
+        W = self.kv_window
+        S = len(prompt)
+        NB = self.num_blocks
+        bucket = max(1, min(sv.prefill_bucket, sv.max_seq))
+        row = np.full((self.blocks_per_slot,), NB, np.int32)
+        slot_ids = list(shared)
+        row[:len(slot_ids)] = slot_ids
+        first_lblk = 0
+        fold_base = 0
+        off = (start_off // bucket) * bucket
+        while off < S:
+            seg = prompt[off:off + bucket]
+            end = off + len(seg)                   # prompt rows fed so far
+            need_end = (end - 1) // bs             # last logical block hit
+            have_end = first_lblk + len(slot_ids) - 1
+            if need_end > have_end:
+                ids = self._take_blocks(need_end - have_end)
+                if ids is None:
+                    self.alloc.unref(slot_ids)
+                    return cache, [], 0, False
+                row[have_end + 1:need_end + 1] = ids
+                slot_ids.extend(ids)
+            tok = np.zeros((1, bucket), np.int32)
+            tok[0, :len(seg)] = seg
+            cache = self._prefill_one(cache, jnp.asarray(tok),
+                                      jnp.asarray(row), off, slot,
+                                      fold_base)
+            # fold whole blocks that aged past the window ([0, end) keeps
+            # >= W exact rows; the decode resume row S-1 always stays
+            # exact because fold_base <= S - W <= S - 1)
+            n_elig = max(0, (end - W) // bs) - first_lblk
+            while n_elig > 0:
+                k = min(n_elig, self.prefill_fold_cap // bs)
+                cache = self._fold_fn(cache, jnp.asarray(row),
+                                      jnp.int32(fold_base),
+                                      jnp.int32(k * bs), jnp.int32(slot))
+                # sentinel the folded entries BEFORE freeing: a freed
+                # block may be re-allocated (e.g. as a CoW fork target)
+                # while this row is still live
+                row[first_lblk:first_lblk + k] = NB
+                dead = slot_ids[:k]
+                del slot_ids[:k]
+                self.alloc.unref(dead)
+                first_lblk += k
+                fold_base += k * bs
+                n_elig -= k
+            off += bucket
+        return cache, slot_ids, first_lblk, True
 
     def _take_blocks(self, n: int) -> Optional[List[int]]:
         """Allocate ``n`` pool blocks, evicting IDLE prefix-cache entries
@@ -531,7 +803,7 @@ class SlotScheduler:
         return ids
 
     def _ensure_exclusive(self, slot: int, slot_ids: List[int], cache,
-                          first_write: int):
+                          first_write: int, first_lblk: int = 0):
         """Copy-on-write fork: make every block of ``slot`` that decode
         can write — logical blocks covering positions >= ``first_write``
         — exclusively held (refcount 1).  Shared blocks (prefix-cache
@@ -541,9 +813,12 @@ class SlotScheduler:
         pools, ``slot_ids`` is rebound in place and the shared block
         loses this slot's reference.  Returns (cache, ok); ok False when
         the pool can't supply a fork target right now (caller unwinds
-        and defers the admission)."""
+        and defers the admission).  ``first_lblk`` is the logical block
+        index of ``slot_ids[0]`` — nonzero for sketched slots whose
+        leading blocks already folded into the tail and were freed."""
         bs = self.block_size
-        for i in range(first_write // bs, len(slot_ids)):
+        for i in range(max(0, first_write // bs - first_lblk),
+                       len(slot_ids)):
             b = slot_ids[i]
             nb = self.alloc.fork(b)
             while nb is None and self.prefix_cache.evict_one(
@@ -565,8 +840,10 @@ class SlotScheduler:
         S = len(prompt)
         st = self._state
         hit = None
+        fold_rows = 0
         if self.is_kv:
             bs = self.block_size
+            use_sketch = self.sketch_on and req.kv_sketch is not False
             if req.rid not in self._admit_memo:
                 hit = self.prefix_cache.lookup(prompt)
                 # hits feed the admission path too: a hot prompt that
@@ -594,25 +871,53 @@ class SlotScheduler:
                 self.alloc.ref(shared)
             if admit_plen is not None and admit_plen <= start_off:
                 admit_plen = None    # nothing beyond what we already share
-            n_total = -(-(S + req.max_new + self.spec_overhang) // bs)
-            new_ids = self._take_blocks(n_total - len(shared))
-            if new_ids is None:
-                if hit is not None:
-                    self.alloc.unref(shared)
-                if not any(r is not None for r in self._slot_req):
-                    raise RuntimeError(
-                        f"kv pool ({self.num_blocks} blocks of {bs}) too "
-                        f"small for prompt {S} + max_new {req.max_new}")
-                return False
-            slot_ids = shared + new_ids
+            first_lblk = 0
+            if use_sketch:
+                # fold-through prefill: the tail must be zeroed FIRST
+                # (the slot lane may hold a retired occupant's sums)
+                cache0 = self._zero_tail(st.cache, jnp.int32(slot))
+                st = st._replace(cache=cache0)
+                cache, slot_ids, first_lblk, ok_pf = \
+                    self._sketch_prefill_admit(slot, cache0, prompt,
+                                               shared, start_off)
+                if not ok_pf:
+                    # blocks already unreffed; the prefill chunks donated
+                    # the old pool buffers, so the threaded cache must
+                    # land back in engine state before deferring
+                    self._state = st._replace(cache=cache)
+                    if not any(r is not None for r in self._slot_req):
+                        raise RuntimeError(
+                            f"kv pool ({self.num_blocks} blocks of {bs}) "
+                            f"too small for sketched prompt {S} with "
+                            f"window {self.kv_window}")
+                    return False
+            else:
+                n_total = -(-(S + req.max_new + self.spec_overhang) // bs)
+                new_ids = self._take_blocks(n_total - len(shared))
+                if new_ids is None:
+                    if hit is not None:
+                        self.alloc.unref(shared)
+                    if not any(r is not None for r in self._slot_req):
+                        raise RuntimeError(
+                            f"kv pool ({self.num_blocks} blocks of {bs}) "
+                            f"too small for prompt {S} + max_new "
+                            f"{req.max_new}")
+                    return False
+                slot_ids = shared + new_ids
+                row = np.full((self.blocks_per_slot,), self.num_blocks,
+                              np.int32)
+                row[:len(slot_ids)] = slot_ids
+                table = jnp.asarray(row)
+                st = st._replace(tables=st.tables.at[slot].set(table))
+                cache = self._chunk_prefill_loop(st.cache, prompt, table,
+                                                 start_off, slot)
             self._slot_blocks[slot] = slot_ids
-            row = np.full((self.blocks_per_slot,), self.num_blocks,
-                          np.int32)
-            row[:len(slot_ids)] = slot_ids
-            table = jnp.asarray(row)
-            st = st._replace(tables=st.tables.at[slot].set(table))
-            cache = self._chunk_prefill_loop(st.cache, prompt, table,
-                                             start_off)
+            if admit_plen is not None and first_lblk > 0:
+                # fold-through freed leading prompt blocks — the prefix's
+                # block run no longer exists, and admitting the surviving
+                # suffix would register freed (re-allocatable) block ids
+                # as live cache entries
+                admit_plen = None
             if admit_plen is not None:
                 self.prefix_cache.admit(prompt, admit_plen,
                                         tuple(slot_ids[:admit_plen // bs]))
@@ -625,7 +930,7 @@ class SlotScheduler:
             # never write a block with refcount > 1.
             if self.spec_max:
                 cache, ok = self._ensure_exclusive(slot, slot_ids, cache,
-                                                   S - 1)
+                                                   S - 1, first_lblk)
             else:
                 ok = True
             if not ok:
@@ -641,14 +946,18 @@ class SlotScheduler:
                                  jnp.int32)))
                 self.alloc.unref(slot_ids)
                 self._slot_blocks[slot] = []
+                self._slot_use_sketch[slot] = False
+                self._slot_first_lblk[slot] = 0
                 self._admit_memo[req.rid] = None
                 return False
-            st = st._replace(
-                tables=st.tables.at[slot].set(
-                    jnp.asarray(np.concatenate([
-                        np.asarray(slot_ids, np.int32),
-                        np.full((self.blocks_per_slot - len(slot_ids),),
-                                self.num_blocks, np.int32)]))))
+            row = np.full((self.blocks_per_slot,), self.num_blocks,
+                          np.int32)
+            row[first_lblk:first_lblk + len(slot_ids)] = slot_ids
+            st = st._replace(tables=st.tables.at[slot].set(
+                jnp.asarray(row)))
+            fold_rows = first_lblk * bs
+            self._slot_first_lblk[slot] = first_lblk
+            self._slot_use_sketch[slot] = use_sketch
             # used-rows tracks DEMAND: every row a live request attends,
             # shared prefix rows counted per referencing request — so
             # demand exceeding reserved is the zero-copy sharing win
@@ -683,6 +992,7 @@ class SlotScheduler:
             top_k=st.top_k.at[slot].set(int(req.top_k)),
             keys=st.keys.at[slot].set(self._request_key(req)),
             spec_k=st.spec_k.at[slot].set(eff_spec),
+            fold_base=st.fold_base.at[slot].set(fold_rows),
         )
         self._state = st
         self._slot_req[slot] = req
@@ -717,13 +1027,93 @@ class SlotScheduler:
             tables = self._state.tables.at[np.asarray(freed)].set(
                 self.num_blocks)
             self._state = self._state._replace(tables=tables)
+            if self.sketch_on:
+                # a retiring slot's fold frontier resets with it; the tail
+                # sums themselves are zeroed lazily at the NEXT admission
+                self._state = self._state._replace(
+                    fold_base=self._state.fold_base.at[
+                        np.asarray(freed)].set(0))
             for s in freed:
                 self.alloc.unref(self._slot_blocks[s])
                 self._slot_blocks[s] = []
                 self._used_rows -= self._slot_rows[s]
                 self._slot_rows[s] = 0
+                self._slot_first_lblk[s] = 0
+                self._slot_use_sketch[s] = False
         self.completed.extend(done)
         return done
+
+    def _plan_folds(self) -> np.ndarray:
+        """Pre-chunk bookkeeping for sketched slots: allocate the blocks
+        the coming chunk can write (lazy lookahead — a sketched slot
+        never reserves its whole context) and decide how many rows each
+        slot folds into its tail at the chunk head.  Returns the per-slot
+        fold length (rows, block multiples) passed into the compiled
+        chunk; the matching host-side frees happen in ``_finish_folds``
+        AFTER the chunk consumed the folded blocks."""
+        bs = self.block_size
+        W = self.kv_window
+        fold = np.zeros((self.serve.max_batch,), np.int32)
+        pos = np.asarray(self._state.pos)
+        tables = self._state.tables
+        dirty = False
+        for s, req in enumerate(self._slot_req):
+            if req is None or not self._slot_use_sketch[s]:
+                continue
+            p = int(pos[s])
+            first = self._slot_first_lblk[s]
+            held = self._slot_blocks[s]
+            # the chunk writes rows up to p + adv_max (+ rejected
+            # speculative writes); clamp to the request's own demand
+            last = min(p + self.adv_max, self._slot_rows[s] - 1) \
+                + self.spec_overhang
+            need_end = min(last // bs, self.blocks_per_slot - 1)
+            have_end = first + len(held) - 1
+            if need_end > have_end:
+                ids = self._take_blocks(need_end - have_end)
+                if ids is None:
+                    raise RuntimeError(
+                        f"kv pool exhausted extending sketched slot {s} "
+                        f"(pool {self.num_blocks} blocks of {bs}; raise "
+                        f"cfg.serve.num_kv_blocks or shrink "
+                        f"kv_sketch_window)")
+                tables = tables.at[s, have_end + 1:need_end + 1].set(
+                    jnp.asarray(np.asarray(ids, np.int32)))
+                held.extend(ids)
+                dirty = True
+            # fold whole blocks aged past the exact window, at most one
+            # chunk's worth (the compiled fold span is fold_cap rows)
+            n = min(max(0, (p + 1 - W) // bs - first), self.fold_cap // bs,
+                    len(held))
+            fold[s] = n * bs
+        if dirty:
+            self._state = self._state._replace(tables=tables)
+        return fold
+
+    def _finish_folds(self, fold: np.ndarray) -> None:
+        """Post-chunk half of a fold: the chunk already accumulated the
+        folded rows into the tails and advanced ``fold_base``; here the
+        blocks leave the slot — sentinel the table entries FIRST (a freed
+        block can be re-allocated immediately), then drop the refs."""
+        tables = self._state.tables
+        dead: List[int] = []
+        dirty = False
+        for s in range(self.serve.max_batch):
+            n = int(fold[s]) // self.block_size
+            if n == 0:
+                continue
+            first = self._slot_first_lblk[s]
+            tables = tables.at[s, first:first + n].set(self.num_blocks)
+            dirty = True
+            dead.extend(self._slot_blocks[s][:n])
+            del self._slot_blocks[s][:n]
+            self._slot_first_lblk[s] = first + n
+        if dirty:
+            # sentinel the rows BEFORE the unref makes the blocks
+            # re-allocatable (nothing allocates between these two lines,
+            # so no other slot's table can claim a stale-mapped block)
+            self._state = self._state._replace(tables=tables)
+            self.alloc.unref(dead)
 
     @property
     def pending(self) -> bool:
@@ -744,12 +1134,25 @@ class SlotScheduler:
                 self._queue.pop(0)
         if not any(r is not None for r in self._slot_req):
             return []
+        fold_host = None
+        if self.sketch_on:
+            fold_host = self._plan_folds()
         if self.spec_max > 0:
+            if self.sketch_on:
+                self._state, toks, emits = self._chunk_fn(
+                    self.params, self.draft.params, self._state,
+                    jnp.asarray(fold_host))
+            else:
+                self._state, toks, emits = self._chunk_fn(
+                    self.params, self.draft.params, self._state)
+        elif self.sketch_on:
             self._state, toks, emits = self._chunk_fn(
-                self.params, self.draft.params, self._state)
+                self.params, self._state, jnp.asarray(fold_host))
         else:
             self._state, toks, emits = self._chunk_fn(self.params,
                                                       self._state)
+        if fold_host is not None:
+            self._finish_folds(fold_host)
         self.decode_steps += self.serve.decode_chunk
         toks = np.asarray(toks)
         emits = np.asarray(emits)
@@ -862,3 +1265,25 @@ class SlotScheduler:
             return self.kv_cache_bytes()
         row_bytes = self.alloc.block_bytes / self.block_size
         return int(row_bytes * self.serve.max_seq * self.serve.max_batch)
+
+    def kv_sketch_tail_bytes(self) -> int:
+        """Bytes of the per-slot FCS tail tables (target + draft) — the
+        FIXED cost that replaces unbounded exact-KV growth past the
+        window.  0 when the engine runs without sketching."""
+        if not (self.is_kv and self.sketch_on):
+            return 0
+        total = kvs.tail_state_bytes(self._state.cache["tail"])
+        if self.draft is not None:
+            total += kvs.tail_state_bytes(
+                self._state.cache["draft"]["tail"])
+        return total
+
+    def kv_sketch_exact_bytes(self) -> int:
+        """Bytes of pool blocks currently held by SKETCHED slots — the
+        exact recent-window span of the two-span cache."""
+        if not (self.is_kv and self.sketch_on):
+            return 0
+        bb = self.alloc.block_bytes
+        return sum(len(self._slot_blocks[s]) * bb
+                   for s in range(self.serve.max_batch)
+                   if self._slot_use_sketch[s])

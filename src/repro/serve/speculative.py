@@ -37,10 +37,12 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import transformer as tf
+from repro.serve import kv_sketch as kvs
 
 
 def build_spec_chunk(cfg: ModelConfig, draft_cfg: ModelConfig,
-                     decode_chunk: int, spec_max: int, sample):
+                     decode_chunk: int, spec_max: int, sample,
+                     sketch=None):
     """Build the speculative decode chunk: ``decode_chunk`` rounds of
     propose/verify/commit over all slots, ONE compilation for the
     engine's lifetime.  ``sample`` is the scheduler's per-slot sampler
@@ -49,14 +51,34 @@ def build_spec_chunk(cfg: ModelConfig, draft_cfg: ModelConfig,
     (new_state, toks, emits) with toks/emits shaped
     (decode_chunk, B, spec_max + 1) — emitted tokens are the leading
     True-masked entries of each round's row, in order.
+
+    ``sketch`` (sketched engines only) is the static fold geometry
+    ``{"onehot", "coeffs", "fold_cap"}``; the returned fn then takes a
+    4th argument ``fold_len`` (B,) and, at the chunk head, folds the
+    aged exact-window rows of BOTH pools into the per-slot tail tables
+    (speculation only ever folds COMMITTED rows: fold_base advances
+    through positions the scheduler has already verified past).  Rounds
+    then run two-span attention — draft propose and target verify both
+    see exact window + sketched tail.
     """
     K = spec_max
     V = cfg.vocab_size
 
-    def spec_chunk_fn(params, draft_params, state):
+    def spec_chunk_fn(params, draft_params, state, fold_len=None):
         temp, top_k = state.temp, state.top_k
         spec_k = jnp.minimum(state.spec_k, K)
         tables = state.tables
+        sk = None
+        if sketch is not None:
+            tail = kvs.fold_pool(state.cache["kv"], state.cache["tail"],
+                                 tables, state.fold_base, fold_len,
+                                 sketch["coeffs"], sketch["fold_cap"])
+            dtail = kvs.fold_pool(state.cache["draft"]["kv"],
+                                  state.cache["draft"]["tail"], tables,
+                                  state.fold_base, fold_len,
+                                  sketch["coeffs"], sketch["fold_cap"])
+            fold_base = state.fold_base + fold_len
+            sk = {"fold_base": fold_base, "onehot": sketch["onehot"]}
 
         def round_fn(carry, _):
             kv, dkv, cur, pos, remaining, keys = carry
@@ -66,7 +88,7 @@ def build_spec_chunk(cfg: ModelConfig, draft_cfg: ModelConfig,
                 dkv, tok = c
                 lg, dkv = tf.decode_step(draft_params, dkv, tok,
                                          pos + i, draft_cfg,
-                                         tables=tables)
+                                         tables=tables, sketch=sk)
                 nxt = jnp.argmax(lg[:, :V].astype(jnp.float32),
                                  axis=-1).astype(jnp.int32)
                 return (dkv, nxt[:, None]), tok[:, 0]
@@ -77,7 +99,7 @@ def build_spec_chunk(cfg: ModelConfig, draft_cfg: ModelConfig,
 
             # -- target: verify all K+1 positions at once -------------
             logits, kv = tf.verify_step(params, kv, vtok, pos, cfg,
-                                        tables=tables)
+                                        tables=tables, sketch=sk)
             lg = logits[..., :V].astype(jnp.float32)  # (B, K+1, V)
             greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
 
@@ -100,13 +122,25 @@ def build_spec_chunk(cfg: ModelConfig, draft_cfg: ModelConfig,
             remaining = remaining - e
             return (kv, dkv, cur, pos, remaining, keys), (out, emit)
 
-        carry = ({"kv": state.cache["kv"]}, state.cache["draft"],
-                 state.cur, state.pos, state.remaining, state.keys)
+        if sketch is not None:
+            kv0 = {"kv": state.cache["kv"], "tail": tail}
+            dkv0 = {"kv": state.cache["draft"]["kv"], "tail": dtail}
+        else:
+            kv0 = {"kv": state.cache["kv"]}
+            dkv0 = state.cache["draft"]
+        carry = (kv0, dkv0, state.cur, state.pos, state.remaining,
+                 state.keys)
         (kv, dkv, cur, pos, remaining, keys), (toks, emits) = \
             jax.lax.scan(round_fn, carry, None, length=decode_chunk)
-        new_state = state._replace(
-            cache={"kv": kv["kv"], "draft": dkv},
-            cur=cur, pos=pos, remaining=remaining, keys=keys)
+        if sketch is not None:
+            new_cache = {"kv": kv["kv"], "tail": kv["tail"], "draft": dkv}
+            new_state = state._replace(
+                cache=new_cache, cur=cur, pos=pos, remaining=remaining,
+                keys=keys, fold_base=fold_base)
+        else:
+            new_state = state._replace(
+                cache={"kv": kv["kv"], "draft": dkv},
+                cur=cur, pos=pos, remaining=remaining, keys=keys)
         return new_state, toks, emits    # toks/emits: (chunk, B, K+1)
 
     return spec_chunk_fn
