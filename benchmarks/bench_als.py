@@ -37,7 +37,7 @@ def run(I=80, R=10, sigma=0.01, Js=(1500, 3000), D=10, iters=30, seed=0):
 
     sec = timeit(lambda: once("plain", 0), reps=1, warmup=0)
     r_obs, r_clean = once("plain", 0)
-    emit(f"als_table3/plain", sec,
+    emit("als_table3/plain", sec,
          f"res_obs={r_obs:.4f};res_clean={r_clean:.4f}")
     for method in ("ts", "fcs"):
         for J in Js:

@@ -236,6 +236,76 @@ def _long_context(arch: str, context: int, max_new: int, max_seq: int,
          f"decode_compiles={sched.decode_compilations}")
 
 
+def _paged_kernel(arch: str, n_requests: int, prompt_len: int,
+                  max_new: int, max_seq: int) -> None:
+    """Flash-decode paged-attention kernel vs the jnp gather path.
+
+    Runs the same greedy stream through two engines — one with
+    ``paged_kernels=True`` (Pallas; interpret mode off-TPU) and one with
+    the jnp oracle path — and times one compiled multi-query verify step
+    on each implementation over an identically prefilled pool.  Reports
+    decode tok/s for both, the kernel/jnp speedup, and the verify-step
+    latencies.  No speedup floor is asserted: on CPU the kernel runs
+    interpreted, so the ratio only becomes a win on TPU — the row exists
+    to put the number on the trend line either way.
+    """
+    import jax.numpy as jnp
+
+    from repro.models import transformer as tf
+
+    cfg = reduced_config(arch)
+    k_params, _ = jax.random.split(jax.random.PRNGKey(0))
+    params = M.init_params(k_params, cfg)
+    rng = np.random.RandomState(7)
+    prompts = [rng.randint(0, cfg.vocab_size,
+                           (prompt_len,)).astype(np.int32)
+               for _ in range(n_requests)]
+
+    def run_engine(pk):
+        serve = dataclasses.replace(
+            cfg.serve, max_batch=2, max_seq=max_seq, decode_chunk=4,
+            prefill_bucket=16, admit_threshold=1 << 30, paged_kernels=pk)
+        sched = SlotScheduler(cfg, params, serve=serve)
+        sched.run([Request(rid=10_000 + i, tokens=p, max_new=max_new)
+                   for i, p in enumerate(prompts[:2])])   # compile warmup
+        reqs = [Request(rid=i, tokens=p, max_new=max_new)
+                for i, p in enumerate(prompts)]
+        t0 = time.time()
+        done = sched.run(reqs)
+        dt = time.time() - t0
+        assert sched.decode_compilations == 1, sched.decode_compilations
+        return sum(len(c.tokens) for c in done) / dt
+
+    kernel_tok_s = run_engine(True)
+    jnp_tok_s = run_engine(False)
+
+    # one compiled verify step (spec_max + 1 = 4 rows/slot), same cache
+    from benchmarks.common import timeit
+    B, bs, nper = 2, 16, max_seq // 16
+    tables = jnp.arange(B * nper, dtype=jnp.int32).reshape(B, nper)
+    cache = tf.init_paged_cache(cfg, B * nper, bs)
+    toks = jnp.asarray(rng.randint(0, cfg.vocab_size, (1, 16)), jnp.int32)
+    for b in range(B):
+        cache = tf.prefill_chunk(params, cache, toks, tables[b],
+                                 jnp.int32(0), cfg, kernels=False)
+    vt = jnp.asarray(rng.randint(0, cfg.vocab_size, (B, 4)), jnp.int32)
+    pos = jnp.full((B,), 16, jnp.int32)
+
+    def verify_fn(pk):
+        return jax.jit(lambda c, t, i: tf.verify_step(
+            params, c, t, i, cfg, tables=tables, kernels=pk)[0])
+
+    t_k = timeit(verify_fn(True), cache, vt, pos)
+    t_j = timeit(verify_fn(False), cache, vt, pos)
+    emit(f"serve/paged_kernel/{arch}", 1.0 / max(kernel_tok_s, 1e-9),
+         f"family={cfg.family};kernel_tok_s={kernel_tok_s:.1f};"
+         f"jnp_tok_s={jnp_tok_s:.1f};"
+         f"paged_kernel_speedup={kernel_tok_s / jnp_tok_s:.2f}x;"
+         f"verify_us_kernel={t_k * 1e6:.1f};"
+         f"verify_us_jnp={t_j * 1e6:.1f};"
+         f"backend={jax.default_backend()}")
+
+
 def _hit_latency(arch: str, prefix_len: int, suffix_len: int, max_new: int,
                  max_seq: int) -> None:
     """Cached-prefix request latency (suffix chunk-prefilled, spanning
@@ -302,6 +372,9 @@ def run(archs=("gemma-2b", "xlstm-1.3b", "zamba2-2.7b"),
     # sketched long-context: context >= 4x the pool's row capacity
     _long_context("gemma-2b", context=580, max_new=max_new, max_seq=1024,
                   window=64, ratio=8, num_blocks=9)
+    # flash-decode paged-attention kernel vs the jnp gather path
+    _paged_kernel("gemma-2b", n_requests=4, prompt_len=12,
+                  max_new=max_new, max_seq=64)
 
 
 if __name__ == "__main__":

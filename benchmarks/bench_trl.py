@@ -101,7 +101,6 @@ def run(crs=(20, 40, 100), seed=0, n_train=2048, n_test=512):
                                     FEAT, (j1, j2, j3), 1)
         Jt = fcs_sketch_len((j1, j2, j3))
         for kind in ("fcs", "ts"):
-            Jlen = Jt if kind == "fcs" else j1  # TS circular: length J
             if kind == "ts":
                 hs = make_tensor_hashes(jax.random.fold_in(key, 3),
                                         FEAT, Jt, 1)  # equal sketch length

@@ -10,9 +10,23 @@ makes hard latency gates flaky; the table is for humans and the artifact
 trail.  ``--max-regress R`` turns it into a gate: exit 1 if any row's
 us_per_call regressed by more than the factor R.  ``--warn-only``
 downgrades that gate to a GitHub Actions ``::warning::`` annotation
-(exit 0) — the CI smoke job uses it while runner noise is being
-characterized, so regressions surface on the run summary without
-blocking merges.
+(exit 0) for jobs that only want the run-summary note.
+
+  python -m benchmarks.compare base.json cur.json --max-regress 2.0 \
+      --spread-files r1.json r2.json r3.json
+
+``--spread-files`` hardens the gate against runner noise with the SAME
+commit's repeat artifacts (the smoke job runs the bench 3x): each row's
+threshold is raised from the global ``--max-regress`` floor to
+``1 + SPREAD_MARGIN *`` its measured relative spread when the row is
+noisier than the floor allows — a quiet row is gated tight, a noisy row
+is never gated below what its own jitter can produce.  Rows absent from
+the repeats keep the global floor.
+
+``--missing-baseline-ok`` treats an unreadable or corrupt BASELINE
+artifact as "no trend yet" (::warning:: + exit 0) instead of an error —
+a poisoned artifact from a previous run must not block publishing the
+current one.  The current artifact is never excused.
 
   python -m benchmarks.compare --spread r1.json r2.json [r3.json ...]
 
@@ -31,7 +45,12 @@ import sys
 TRACKED = ("tok_s", "hit_rate", "kv_peak_reserved_bytes",
            "kv_peak_used_bytes", "kv_reduction", "cached_bytes",
            "sketch_bytes_ratio", "spec_speedup", "accept_rate",
-           "mean_accepted_run", "kv_tail_bytes", "tail_cosine")
+           "mean_accepted_run", "kv_tail_bytes", "tail_cosine",
+           "paged_kernel_speedup", "kernel_tok_s", "verify_us_kernel")
+
+# how many multiples of a row's measured run-to-run spread the per-row
+# gate allows before calling a regression (see --spread-files)
+SPREAD_MARGIN = 3.0
 
 
 def _load(path: str) -> dict:
@@ -48,11 +67,28 @@ def _metrics(row: dict) -> dict:
     return m
 
 
+def row_spreads(paths: list) -> dict:
+    """Per-row relative us_per_call spread across repeat artifacts:
+    (max - min) / min for every row present in ALL repeats."""
+    runs = [_load(p) for p in paths]
+    out = {}
+    for n in runs[0]:
+        if all(n in r for r in runs):
+            vals = [r[n]["us_per_call"] for r in runs]
+            out[n] = (max(vals) - min(vals)) / max(min(vals), 1e-12)
+    return out
+
+
 def compare(base: dict, cur: dict, max_regress: float = 0.0,
-            warn_only: bool = False) -> int:
+            warn_only: bool = False, spreads: dict = None) -> int:
+    """Print the trend table; gate on per-row regressions.
+
+    With ``spreads`` (row -> relative run-to-run spread, from the same
+    commit's repeats) each row's threshold is
+    ``max(max_regress, 1 + SPREAD_MARGIN * spread)`` — the global floor,
+    lifted only for rows whose own measured noise exceeds it."""
     names = list(cur) + [n for n in base if n not in cur]
-    worst = 0.0
-    worst_name = ""
+    failures = []
     print(f"{'name':44s} {'us/call':>12s} {'Δ':>8s}  tracked metrics")
     for n in names:
         b, c = base.get(n), cur.get(n)
@@ -64,8 +100,11 @@ def compare(base: dict, cur: dict, max_regress: float = 0.0,
             print(f"{n:44s} {us:12.2f} {'(new)':>8s}")
             continue
         ratio = us / max(b["us_per_call"], 1e-12)
-        if ratio > worst:
-            worst, worst_name = ratio, n
+        if max_regress:
+            limit = max(max_regress,
+                        1.0 + SPREAD_MARGIN * (spreads or {}).get(n, 0.0))
+            if ratio > limit:
+                failures.append((n, ratio, limit))
         bits = []
         bm, cm = _metrics(b), _metrics(c)
         for k in TRACKED:
@@ -75,14 +114,16 @@ def compare(base: dict, cur: dict, max_regress: float = 0.0,
                 else:
                     bits.append(f"{k}={cm[k]:g}")
         print(f"{n:44s} {us:12.2f} {ratio:7.2f}x  {'; '.join(bits)}")
-    if max_regress and worst > max_regress:
-        msg = (f"worst us/call regression {worst:.2f}x ({worst_name}) "
-               f"exceeds --max-regress {max_regress}")
+    if failures:
+        failures.sort(key=lambda f: f[1] / f[2], reverse=True)
+        msg = "; ".join(f"{n} {r:.2f}x (limit {lim:.2f}x)"
+                        for n, r, lim in failures)
         if warn_only:
             # GitHub Actions annotation: lands on the run summary page
             print(f"::warning title=bench regression::{msg}")
             return 0
-        print(f"# FAIL: {msg}", file=sys.stderr)
+        print(f"# FAIL: us/call regressions past their per-row limits: "
+              f"{msg}", file=sys.stderr)
         return 1
     return 0
 
@@ -123,6 +164,16 @@ def main() -> None:
     ap.add_argument("--spread", action="store_true",
                     help="treat the artifacts as repeats of one bench "
                          "and report per-row run-to-run spread")
+    ap.add_argument("--spread-files", nargs="+", default=[],
+                    metavar="JSON",
+                    help="repeat artifacts of the CURRENT commit; raises "
+                         "each row's gate to 1 + SPREAD_MARGIN * its "
+                         "measured relative spread when noisier than "
+                         "--max-regress")
+    ap.add_argument("--missing-baseline-ok", action="store_true",
+                    help="warn + exit 0 when the baseline artifact is "
+                         "missing or corrupt (the current artifact is "
+                         "never excused)")
     args = ap.parse_args()
     if args.spread:
         if len(args.artifacts) < 2:
@@ -130,8 +181,17 @@ def main() -> None:
         sys.exit(spread(args.artifacts))
     if len(args.artifacts) != 2:
         ap.error("expected exactly: baseline.json current.json")
-    sys.exit(compare(_load(args.artifacts[0]), _load(args.artifacts[1]),
-                     args.max_regress, args.warn_only))
+    try:
+        base = _load(args.artifacts[0])
+    except (OSError, ValueError, KeyError, TypeError) as e:
+        if not args.missing_baseline_ok:
+            raise
+        print(f"::warning title=bench baseline unusable::"
+              f"{args.artifacts[0]}: {e} — skipping trend")
+        sys.exit(0)
+    spreads = row_spreads(args.spread_files) if args.spread_files else None
+    sys.exit(compare(base, _load(args.artifacts[1]),
+                     args.max_regress, args.warn_only, spreads))
 
 
 if __name__ == "__main__":

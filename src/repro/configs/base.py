@@ -126,6 +126,16 @@ class ServeConfig:
     tail bytes are ~2 * rows/ratio of the folded KV bytes.
     ``kv_sketch_rows``: independent hash rows per tail table (median
     combine width; the FCS D parameter applied to KV).
+    ``paged_kernels``: attention implementation for the paged serve path
+    (decode / speculative verify / chunked prefill).  None (default)
+    auto-detects: the flash-decode Pallas kernels
+    (``kernels/paged_attention.py`` — one pass over each slot's block
+    table, no dense gathered KV copy) on TPU, the jnp
+    gather-then-softmax oracle path elsewhere.  True forces the kernels
+    (interpret mode off-TPU — the validation configuration), False
+    forces the jnp path.  Resolved once at engine construction; both
+    choices keep the one-compilation-per-engine contract and the
+    sketched two-span fold_base == 0 bitwise anchor.
     """
 
     max_batch: int = 8
@@ -148,6 +158,7 @@ class ServeConfig:
     kv_sketch_window: int = 0
     kv_sketch_ratio: int = 8
     kv_sketch_rows: int = 3
+    paged_kernels: Optional[bool] = None
 
 
 # ---------------------------------------------------------------------------
@@ -241,7 +252,6 @@ class ModelConfig:
     def param_count(self) -> int:
         """Exact parameter count of the model as implemented (total)."""
         d, v = self.d_model, self.padded_vocab
-        hd = self.resolved_head_dim
         n = 0
         n += v * d                                # embedding
         if not self.tie_embeddings:

@@ -90,7 +90,6 @@ def hcs_oracle(T: jax.Array, hashes: Sequence[ModeHash]):
     CS(u) directly — HCS(T)(I, CS2(u), CS3(u)) then decompress mode 1."""
     sk = hcs_general(T, hashes)                        # (D, J1, J2, J3)
     mh1, mh2, mh3 = hashes
-    I = T.shape[0]
 
     def tiuu(u):
         c2 = cs_apply(u, mh2)                          # (D, J2)

@@ -14,12 +14,21 @@ import jax
 
 from repro.kernels import ref
 from repro.kernels.count_sketch import count_sketch as _cs_pallas
+from repro.kernels.paged_attention import paged_attention as _pa_pallas
 from repro.kernels.sketch_update import sketch_update as _su_pallas
 from repro.kernels.unsketch import unsketch as _un_pallas
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def default_use_pallas() -> bool:
+    """The backend auto-detect every op's ``use_pallas=None`` resolves
+    to: Pallas kernels on TPU, jnp oracles elsewhere.  Exposed so the
+    serve scheduler can resolve ``ServeConfig.paged_kernels=None`` once
+    and bake a static choice into its compiled chunks."""
+    return _on_tpu()
 
 
 def count_sketch_op(x: jax.Array, h: jax.Array, s: jax.Array, J: int,
@@ -55,3 +64,19 @@ def sketch_update_op(g: jax.Array, m_table: jax.Array, v_table: jax.Array,
                           b1=b1, b2=b2)
     return ref.sketch_update_ref(g, m_table, v_table, coeffs_m, coeffs_v,
                                  b1, b2)
+
+
+def paged_attention_op(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                       tables: jax.Array, start: jax.Array,
+                       fold_base: jax.Array,
+                       use_pallas: bool | None = None):
+    """Flash-decode paged attention statistics (kernels/paged_attention.py).
+    q: (B, Sq, K, R, hd); pools (NB, bs, K, hd); tables (B, nb) int32;
+    start/fold_base (B,) int32.  Returns f32 (m, l, acc):
+    (B, K, R, Sq) x2 and (B, K, R, Sq, hd)."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return _pa_pallas(q, k_pool, v_pool, tables, start, fold_base)
+    return ref.paged_attention_ref(q, k_pool, v_pool, tables, start,
+                                   fold_base)

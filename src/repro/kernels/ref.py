@@ -1,6 +1,8 @@
 """Pure-jnp oracles for the Pallas kernels."""
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 
@@ -48,6 +50,59 @@ def kv_tail_scores_ref(q: jax.Array, tail_k: jax.Array, coeffs: jax.Array,
                     tail_k.astype(jnp.float32))
     est = jnp.einsum("znc,ztc->znt", qa, onehot)
     return jnp.median(est, axis=0)
+
+
+def paged_attention_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                        tables: jax.Array, start: jax.Array,
+                        fold_base: jax.Array):
+    """Oracle for kernels/paged_attention.py: the same online-softmax
+    block walk in plain jnp — a lax.scan over the slot's logical blocks,
+    fetching each physical block through the table (dead entries >= NB
+    clamp the fetch and mask the whole block), with op-for-op the
+    kernel's update equations and dtypes, so interpret mode reproduces it
+    bitwise.  Shapes/returns match ``paged_attention``: q (B,Sq,K,R,hd),
+    pools (NB,bs,K,hd), tables (B,nb) int32, start/fold_base (B,) ->
+    f32 (m, l, acc): (B,K,R,Sq) x2 and (B,K,R,Sq,hd)."""
+    B, Sq, K, R, hd = q.shape
+    NB, bs = k_pool.shape[0], k_pool.shape[1]
+    nb_slot = tables.shape[1]
+    NQ = R * Sq
+    scale = 1.0 / math.sqrt(hd)
+    qt = q.transpose(0, 2, 3, 1, 4).reshape(B, K, NQ, hd)
+    st = start.astype(jnp.int32)
+    fb = fold_base.astype(jnp.int32)
+    qi = jax.lax.broadcasted_iota(jnp.int32, (NQ, bs), 0) % Sq
+
+    def block(carry, j):
+        m, l, acc = carry                # (B,K,NQ) x2, (B,K,NQ,hd)
+        entry = tables[:, j]             # (B,)
+        valid = entry < NB
+        kj = jnp.take(k_pool, jnp.minimum(entry, NB - 1), axis=0)
+        vj = jnp.take(v_pool, jnp.minimum(entry, NB - 1), axis=0)
+        kpos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (NQ, bs), 1)
+        live = ((kpos[None] <= st[:, None, None] + qi[None])
+                & (kpos[None] >= fb[:, None, None])
+                & valid[:, None, None])  # (B, NQ, bs)
+        live = live[:, None]             # (B, 1, NQ, bs)
+        s = jnp.einsum("bknh,bskh->bkns", qt, kj,
+                       preferred_element_type=jnp.float32) * scale
+        s = jnp.where(live, s, -1e30)
+        m_cur = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.where(live, jnp.exp(s - m_cur[..., None]), 0.0)
+        corr = jnp.exp(m - m_cur)
+        l = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkns,bskh->bknh", p.astype(vj.dtype), vj,
+                        preferred_element_type=jnp.float32)
+        acc = acc * corr[..., None] + pv
+        return (m_cur, l, acc), None
+
+    m0 = jnp.full((B, K, NQ), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, K, NQ), jnp.float32)
+    a0 = jnp.zeros((B, K, NQ, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(block, (m0, l0, a0),
+                                  jnp.arange(nb_slot, dtype=jnp.int32))
+    return (m.reshape(B, K, R, Sq), l.reshape(B, K, R, Sq),
+            acc.reshape(B, K, R, Sq, hd))
 
 
 def sketch_update_ref(g: jax.Array, m_table: jax.Array, v_table: jax.Array,

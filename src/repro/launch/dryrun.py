@@ -203,7 +203,6 @@ def main():
     ap.add_argument("--tag", default="")
     args = ap.parse_args()
 
-    cells = []
     archs = ARCH_IDS if args.all or not args.arch else [args.arch]
     shapes = ([s.name for s in SHAPES] if args.all or not args.shape
               else [args.shape])

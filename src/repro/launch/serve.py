@@ -97,6 +97,11 @@ def main():
                     help="append one demo request with a prompt of this "
                          "many tokens (exercises fold-through prefill "
                          "and two-span decode; needs --kv-sketch-window)")
+    ap.add_argument("--paged-kernels", choices=["auto", "on", "off"],
+                    default="auto",
+                    help="Pallas flash-decode paged attention on the serve "
+                         "path (auto = TPU only; 'on' forces the kernels — "
+                         "interpret mode on CPU, slow but exact)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--full", action="store_true",
                     help="run the full architecture (default: reduced)")
@@ -114,7 +119,9 @@ def main():
         spec_k=args.spec_k, draft_depth=args.draft_depth,
         draft_sketch_ratio=args.draft_sketch_ratio,
         kv_sketch_window=args.kv_sketch_window,
-        kv_sketch_ratio=args.kv_sketch_ratio)
+        kv_sketch_ratio=args.kv_sketch_ratio,
+        paged_kernels={"auto": None, "on": True, "off": False}[
+            args.paged_kernels])
     if args.spec_k and cfg.family not in KV_FAMILIES:
         print(f"note: --spec-k needs an attention family; {cfg.family!r} "
               f"decodes plainly")
@@ -144,6 +151,10 @@ def main():
     print(f"decode compilations: {sched.decode_compilations} "
           f"(steps: {sched.decode_steps}), "
           f"prefill compilations: {sched.prefill_compilations}")
+    if cfg.family in KV_FAMILIES:
+        print(f"paged attention: "
+              f"{'pallas kernels' if sched.use_kernels else 'jnp'} "
+              f"(--paged-kernels {args.paged_kernels})")
     if sched.spec_max:
         print(f"speculative: spec_k={sched.spec_max} "
               f"draft_depth={sched.draft.cfg.num_layers} "

@@ -7,6 +7,7 @@ accumulate in f32.
 """
 from __future__ import annotations
 
+import functools
 import math
 from typing import Optional, Tuple
 
@@ -14,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels import ops as kops
 from repro.models.sharding import shard
 
 PDTYPE = jnp.bfloat16  # parameter dtype
@@ -118,6 +120,33 @@ def _sketched_two_span(o, qg, kt, vt, win, tail, sketch, scale):
     merged = merged.transpose(0, 3, 1, 2, 4).astype(o.dtype)  # (B,Sq,K,R,hd)
     sel = (fold_base > 0)[:, None, None, None, None]
     return jnp.where(sel, merged, o)
+
+
+def _kernel_paged_attention(qg, k, v, tables, start, tail, sketch):
+    """Flash-decode kernel path shared by the three paged shapes
+    (kernels/paged_attention.py): attend straight through the block
+    table — the dense gathered KV copy never materializes.  qg:
+    (B, Sq, K, R, hd); k/v: the updated (NB, bs, K, hd) pools; start:
+    (B,) position of each slot's query row 0.  With ``tail``/``sketch``
+    the kernel covers the exact window [fold_base, start + i] and the
+    FCS tail supplies the folded span, merged with online-softmax
+    statistics; slots with fold_base == 0 keep the pure kernel output
+    bitwise (same anchor as _sketched_two_span).  Returns
+    (B, Sq, K, R, hd) in qg's dtype."""
+    B = qg.shape[0]
+    fb = (sketch["fold_base"] if tail is not None
+          else jnp.zeros((B,), jnp.int32))
+    m_e, l_e, acc_e = kops.paged_attention_op(qg, k, v, tables, start, fb,
+                                              use_pallas=True)
+    o = acc_e / jnp.maximum(l_e, 1e-30)[..., None]      # (B,K,R,Sq,hd)
+    if tail is not None:
+        from repro.serve import kv_sketch as _kvs
+        scale = 1.0 / math.sqrt(qg.shape[-1])
+        m_t, l_t, acc_t = _kvs.tail_attend(qg, tail["k"], tail["v"],
+                                           sketch["onehot"], fb, scale)
+        merged = _kvs.merge_spans(m_e, l_e, acc_e, m_t, l_t, acc_t)
+        o = jnp.where((fb > 0)[:, None, None, None, None], merged, o)
+    return o.transpose(0, 3, 1, 2, 4).astype(qg.dtype)  # (B,Sq,K,R,hd)
 
 
 def _gqa_scores_softmax_out(q, k, v, mask, scale):
@@ -229,7 +258,8 @@ def decode_attention(p: dict, x: jax.Array, cfg: ModelConfig,
                      cache: dict, index: jax.Array,
                      tables: Optional[jax.Array] = None,
                      tail: Optional[dict] = None,
-                     sketch: Optional[dict] = None
+                     sketch: Optional[dict] = None,
+                     use_kernel: Optional[bool] = None
                      ) -> Tuple[jax.Array, dict]:
     """Single-token decode against a KV cache.
 
@@ -251,7 +281,7 @@ def decode_attention(p: dict, x: jax.Array, cfg: ModelConfig,
     """
     if tables is not None:
         return _paged_decode_attention(p, x, cfg, cache, index, tables,
-                                       tail, sketch)
+                                       tail, sketch, use_kernel)
     B, one, _ = x.shape
     hd = cfg.resolved_head_dim
     H, K = cfg.num_heads, cfg.num_kv_heads
@@ -288,12 +318,18 @@ def _paged_decode_attention(p: dict, x: jax.Array, cfg: ModelConfig,
                             cache: dict, index: jax.Array,
                             tables: jax.Array,
                             tail: Optional[dict] = None,
-                            sketch: Optional[dict] = None
+                            sketch: Optional[dict] = None,
+                            use_kernel: Optional[bool] = None
                             ) -> Tuple[jax.Array, dict]:
     """Paged single-token decode: scatter each slot's new KV row through
-    its block table, gather its blocks, attend.  See decode_attention.
+    its block table, then attend — in one flash-decode Pallas pass over
+    the table (``use_kernel``, default on TPU) or by gathering the
+    slot's blocks dense and softmaxing in jnp (the oracle path, default
+    elsewhere).  See decode_attention.
     With ``tail``/``sketch`` (serve/kv_sketch.py) the attention becomes
     two-span: exact over [fold_base, index], sketched over [0, fold_base)."""
+    if use_kernel is None:
+        use_kernel = kops.default_use_pallas()
     B, _, _ = x.shape
     hd = cfg.resolved_head_dim
     H, K = cfg.num_heads, cfg.num_kv_heads
@@ -314,22 +350,29 @@ def _paged_decode_attention(p: dict, x: jax.Array, cfg: ModelConfig,
         vn[:, 0].astype(cache["v"].dtype), mode="drop")
     k = shard(k, "kv_blocks", None, "kv_heads", None)
     v = shard(v, "kv_blocks", None, "kv_heads", None)
-    # gather the slot's logical KV row; invalid blocks read as zeros and
-    # sit at positions the per-slot causal mask never exposes
-    kt = jnp.take(k, tables, axis=0, mode="fill", fill_value=0)
-    vt = jnp.take(v, tables, axis=0, mode="fill", fill_value=0)
-    S = nb_slot * bs
-    kt = shard(kt.reshape(B, S, K, hd), "batch", "kv_seq", "kv_heads", None)
-    vt = shard(vt.reshape(B, S, K, hd), "batch", "kv_seq", "kv_heads", None)
-    mask = (jnp.arange(S)[None, :] <= index[:, None]
-            )[:, None, None, None, :]                    # (B,1,1,1,S)
     qg = q.reshape(B, 1, K, R, hd)
     scale = 1.0 / math.sqrt(hd)
-    o = _gqa_scores_softmax_out(qg, kt, vt, mask, scale)
-    if tail is not None:
-        win = mask & (jnp.arange(S)[None, :]
-                      >= sketch["fold_base"][:, None])[:, None, None, None, :]
-        o = _sketched_two_span(o, qg, kt, vt, win, tail, sketch, scale)
+    if use_kernel:
+        o = _kernel_paged_attention(qg, k, v, tables,
+                                    index.astype(jnp.int32), tail, sketch)
+    else:
+        # gather the slot's logical KV row; invalid blocks read as zeros
+        # and sit at positions the per-slot causal mask never exposes
+        kt = jnp.take(k, tables, axis=0, mode="fill", fill_value=0)
+        vt = jnp.take(v, tables, axis=0, mode="fill", fill_value=0)
+        S = nb_slot * bs
+        kt = shard(kt.reshape(B, S, K, hd), "batch", "kv_seq", "kv_heads",
+                   None)
+        vt = shard(vt.reshape(B, S, K, hd), "batch", "kv_seq", "kv_heads",
+                   None)
+        mask = (jnp.arange(S)[None, :] <= index[:, None]
+                )[:, None, None, None, :]                # (B,1,1,1,S)
+        o = _gqa_scores_softmax_out(qg, kt, vt, mask, scale)
+        if tail is not None:
+            win = mask & (jnp.arange(S)[None, :] >=
+                          sketch["fold_base"][:, None])[:, None, None,
+                                                        None, :]
+            o = _sketched_two_span(o, qg, kt, vt, win, tail, sketch, scale)
     o = o.reshape(B, 1, H * hd)
     out = jnp.einsum("bsh,hd->bsd", o, p["wo"])
     return out, {"k": k, "v": v}
@@ -338,7 +381,8 @@ def _paged_decode_attention(p: dict, x: jax.Array, cfg: ModelConfig,
 def verify_attention(p: dict, x: jax.Array, cfg: ModelConfig,
                      cache: dict, index: jax.Array, tables: jax.Array,
                      tail: Optional[dict] = None,
-                     sketch: Optional[dict] = None
+                     sketch: Optional[dict] = None,
+                     use_kernel: Optional[bool] = None
                      ) -> Tuple[jax.Array, dict]:
     """Multi-query paged decode (speculative verify).
 
@@ -376,20 +420,32 @@ def verify_attention(p: dict, x: jax.Array, cfg: ModelConfig,
         vn.astype(cache["v"].dtype), mode="drop")
     k = shard(k, "kv_blocks", None, "kv_heads", None)
     v = shard(v, "kv_blocks", None, "kv_heads", None)
-    kt = jnp.take(k, tables, axis=0, mode="fill", fill_value=0)
-    vt = jnp.take(v, tables, axis=0, mode="fill", fill_value=0)
-    S = nb_slot * bs
-    kt = shard(kt.reshape(B, S, K, hd), "batch", "kv_seq", "kv_heads", None)
-    vt = shard(vt.reshape(B, S, K, hd), "batch", "kv_seq", "kv_heads", None)
-    mask = (jnp.arange(S)[None, None, :] <= positions[:, :, None]
-            )[:, None, None]                             # (B,1,1,C,S)
     qg = q.reshape(B, C, K, R, hd)
     scale = 1.0 / math.sqrt(hd)
-    o = _gqa_scores_softmax_out(qg, kt, vt, mask, scale)
-    if tail is not None:
-        win = mask & (jnp.arange(S)[None, :] >= sketch["fold_base"][:, None]
-                      )[:, None, None, None, :]
-        o = _sketched_two_span(o, qg, kt, vt, win, tail, sketch, scale)
+    if use_kernel is None:
+        use_kernel = kops.default_use_pallas()
+    if use_kernel:
+        # kernel row i of slot b sees key positions <= index[b] + i —
+        # identical per-row math to a single-token decode at that
+        # position, the bitwise spec-identity anchor
+        o = _kernel_paged_attention(qg, k, v, tables,
+                                    index.astype(jnp.int32), tail, sketch)
+    else:
+        kt = jnp.take(k, tables, axis=0, mode="fill", fill_value=0)
+        vt = jnp.take(v, tables, axis=0, mode="fill", fill_value=0)
+        S = nb_slot * bs
+        kt = shard(kt.reshape(B, S, K, hd), "batch", "kv_seq", "kv_heads",
+                   None)
+        vt = shard(vt.reshape(B, S, K, hd), "batch", "kv_seq", "kv_heads",
+                   None)
+        mask = (jnp.arange(S)[None, None, :] <= positions[:, :, None]
+                )[:, None, None]                         # (B,1,1,C,S)
+        o = _gqa_scores_softmax_out(qg, kt, vt, mask, scale)
+        if tail is not None:
+            win = mask & (jnp.arange(S)[None, :] >=
+                          sketch["fold_base"][:, None])[:, None, None,
+                                                        None, :]
+            o = _sketched_two_span(o, qg, kt, vt, win, tail, sketch, scale)
     o = o.reshape(B, C, H * hd)
     out = jnp.einsum("bsh,hd->bsd", o, p["wo"])
     return out, {"k": k, "v": v}
@@ -398,7 +454,8 @@ def verify_attention(p: dict, x: jax.Array, cfg: ModelConfig,
 def chunk_attention(p: dict, x: jax.Array, cfg: ModelConfig,
                     cache: dict, table: jax.Array, start: jax.Array,
                     tail: Optional[dict] = None,
-                    sketch: Optional[dict] = None
+                    sketch: Optional[dict] = None,
+                    use_kernel: Optional[bool] = None
                     ) -> Tuple[jax.Array, dict]:
     """Multi-token chunk against the paged slot KV (chunked prefill).
 
@@ -431,21 +488,31 @@ def chunk_attention(p: dict, x: jax.Array, cfg: ModelConfig,
     # serve_state_pspecs must survive the chunked-prefill update
     k = shard(k, "kv_blocks", None, "kv_heads", None)
     v = shard(v, "kv_blocks", None, "kv_heads", None)
-    ks = jnp.take(k, table, axis=0, mode="fill", fill_value=0)
-    vs = jnp.take(v, table, axis=0, mode="fill", fill_value=0)
-    S = nb_slot * bs
-    ks = ks.reshape(1, S, K, hd)
-    vs = vs.reshape(1, S, K, hd)
-    # causal over absolute positions: key row j visible to chunk query i
-    # iff j <= start + i (earlier chunks / shared prefix blocks included)
-    mask = (jnp.arange(S)[None, :] <= positions[:, None])[None, None, None]
     qg = q.reshape(1, C, K, R, hd)
     scale = 1.0 / math.sqrt(hd)
-    o = _gqa_scores_softmax_out(qg, ks, vs, mask, scale)
-    if tail is not None:
-        win = mask & (jnp.arange(S)[None, :] >= sketch["fold_base"][:, None]
-                      )[:, None, None, None, :]
-        o = _sketched_two_span(o, qg, ks, vs, win, tail, sketch, scale)
+    if use_kernel is None:
+        use_kernel = kops.default_use_pallas()
+    if use_kernel:
+        o = _kernel_paged_attention(qg, k, v, table[None],
+                                    jnp.reshape(start, (1,)).astype(
+                                        jnp.int32), tail, sketch)
+    else:
+        ks = jnp.take(k, table, axis=0, mode="fill", fill_value=0)
+        vs = jnp.take(v, table, axis=0, mode="fill", fill_value=0)
+        S = nb_slot * bs
+        ks = ks.reshape(1, S, K, hd)
+        vs = vs.reshape(1, S, K, hd)
+        # causal over absolute positions: key row j visible to chunk
+        # query i iff j <= start + i (earlier chunks / shared prefix
+        # blocks included)
+        mask = (jnp.arange(S)[None, :] <= positions[:, None]
+                )[None, None, None]
+        o = _gqa_scores_softmax_out(qg, ks, vs, mask, scale)
+        if tail is not None:
+            win = mask & (jnp.arange(S)[None, :] >=
+                          sketch["fold_base"][:, None])[:, None, None,
+                                                        None, :]
+            o = _sketched_two_span(o, qg, ks, vs, win, tail, sketch, scale)
     o = o.reshape(1, C, H * hd)
     out = jnp.einsum("bsh,hd->bsd", o, p["wo"])
     return out, {"k": k, "v": v}
@@ -529,10 +596,7 @@ def init_head(key: jax.Array, cfg: ModelConfig) -> Optional[jax.Array]:
             / math.sqrt(cfg.d_model)).astype(PDTYPE)
 
 
-import functools as _functools
-
-
-@_functools.lru_cache(maxsize=None)
+@functools.lru_cache(maxsize=None)
 def _head_hash_tables(seed: int, d: int, J: int):
     """Host-side (trace-safe) 2-wise-independent hash tables."""
     import numpy as np

@@ -104,24 +104,30 @@ def _init_blocks(key: jax.Array, cfg: ModelConfig) -> Params:
 
 
 def _dense_block(p_l, x, cfg: ModelConfig, positions, cache_l, index, mode,
-                 tables=None, tail_l=None, sketch=None):
+                 tables=None, tail_l=None, sketch=None, kernels=None):
     """One attention+FFN (or attention+MoE) block. Returns (x, aux, cache).
     ``tail_l``/``sketch``: per-layer FCS tail tables + fold state for
-    two-span long-context decode (serve/kv_sketch.py); read-only here."""
+    two-span long-context decode (serve/kv_sketch.py); read-only here.
+    ``kernels``: paged modes — True routes attention through the
+    flash-decode Pallas kernel, False through the jnp gather path, None
+    auto-detects (kernel on TPU)."""
     h = ly.rms_norm(x, p_l["norm1"], cfg.norm_eps)
     new_cache = None
     if mode == "decode":
         a, new_cache = ly.decode_attention(p_l["attn"], h, cfg, cache_l,
                                            index, tables=tables,
-                                           tail=tail_l, sketch=sketch)
+                                           tail=tail_l, sketch=sketch,
+                                           use_kernel=kernels)
     elif mode == "verify":
         a, new_cache = ly.verify_attention(p_l["attn"], h, cfg, cache_l,
                                            index, tables, tail=tail_l,
-                                           sketch=sketch)
+                                           sketch=sketch,
+                                           use_kernel=kernels)
     elif mode == "chunk":
         a, new_cache = ly.chunk_attention(p_l["attn"], h, cfg, cache_l,
                                           tables, index, tail=tail_l,
-                                          sketch=sketch)
+                                          sketch=sketch,
+                                          use_kernel=kernels)
     else:
         a = ly.causal_attention(p_l["attn"], h, cfg, positions)
         if mode == "prefill":
@@ -149,13 +155,19 @@ def forward(params: Params, x: jax.Array, cfg: ModelConfig,
             mode: str = "train", cache: Optional[dict] = None,
             index: Optional[jax.Array] = None,
             tables: Optional[jax.Array] = None,
-            sketch: Optional[dict] = None
+            sketch: Optional[dict] = None,
+            kernels: Optional[bool] = None
             ) -> Tuple[jax.Array, jax.Array, Optional[dict]]:
     """x: embedded inputs (B, S, d).  Returns (hidden, aux_loss, cache).
 
     ``sketch`` (attention families, paged modes only): {"fold_base": (B,)
     int32, "onehot": (Z, T, C)} — enables two-span decode against the
     cache's "tail" FCS tables (serve/kv_sketch.py).
+
+    ``kernels`` (paged modes only): static attention-implementation
+    switch — True runs the flash-decode paged Pallas kernel
+    (kernels/paged_attention.py; interpret mode off-TPU), False the jnp
+    gather-then-softmax path, None auto-detects (kernel on TPU).
 
     Modes: "train" / "prefill" (full-sequence), "decode" (single token per
     slot against the cache — paged through per-slot block ``tables`` when
@@ -179,7 +191,7 @@ def forward(params: Params, x: jax.Array, cfg: ModelConfig,
     if fam in ("dense", "audio", "vlm", "moe"):
         y, aux, new_cache = _forward_attn_stack(params, x, cfg, positions,
                                                 mode, cache, index, tables,
-                                                sketch)
+                                                sketch, kernels)
     elif mode in ("chunk", "verify"):
         raise ValueError(f"mode {mode!r} needs a kv-cache family, "
                          f"got {fam!r}")
@@ -195,7 +207,7 @@ def forward(params: Params, x: jax.Array, cfg: ModelConfig,
 
 
 def _forward_attn_stack(params, x, cfg, positions, mode, cache, index,
-                        tables=None, sketch=None):
+                        tables=None, sketch=None, kernels=None):
     blocks = params["blocks"]
 
     if mode in ("decode", "chunk", "verify"):
@@ -206,7 +218,8 @@ def _forward_attn_stack(params, x, cfg, positions, mode, cache, index,
             p_l, c_l = xs[0], xs[1]
             t_l = xs[2] if sketched else None
             h, a, nc = _dense_block(p_l, h, cfg, positions, c_l, index, mode,
-                                    tables, tail_l=t_l, sketch=sketch)
+                                    tables, tail_l=t_l, sketch=sketch,
+                                    kernels=kernels)
             return (h, aux + a), nc
 
         xs = ((blocks, cache["kv"], cache["tail"]) if sketched
@@ -424,22 +437,27 @@ def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
 def decode_step(params: Params, cache: dict, tokens: jax.Array,
                 index: jax.Array, cfg: ModelConfig,
                 tables: Optional[jax.Array] = None,
-                sketch: Optional[dict] = None
+                sketch: Optional[dict] = None,
+                kernels: Optional[bool] = None
                 ) -> Tuple[jax.Array, dict]:
     """tokens: (B, 1) int32.  Returns (logits (B, Vp) f32, new cache).
     ``tables``: optional (B, blocks_per_slot) block tables — paged-KV
     decode for attention families (dense slot cache otherwise).
-    ``sketch``: optional two-span long-context state (see forward)."""
+    ``sketch``: optional two-span long-context state (see forward).
+    ``kernels``: static paged-attention implementation switch (see
+    forward)."""
     x = ly.embed_tokens(params["embed"], tokens)
     y, _, new_cache = forward(params, x, cfg, mode="decode", cache=cache,
-                              index=index, tables=tables, sketch=sketch)
+                              index=index, tables=tables, sketch=sketch,
+                              kernels=kernels)
     logits = ly.logits_fn(params, y, cfg)[:, 0]
     return logits, new_cache
 
 
 def verify_step(params: Params, cache: dict, tokens: jax.Array,
                 index: jax.Array, cfg: ModelConfig, tables: jax.Array,
-                sketch: Optional[dict] = None
+                sketch: Optional[dict] = None,
+                kernels: Optional[bool] = None
                 ) -> Tuple[jax.Array, dict]:
     """Speculative-decode verification: score C tokens per slot in ONE
     compiled multi-query decode against the paged pool.
@@ -457,7 +475,8 @@ def verify_step(params: Params, cache: dict, tokens: jax.Array,
     """
     x = ly.embed_tokens(params["embed"], tokens)
     y, _, new_cache = forward(params, x, cfg, mode="verify", cache=cache,
-                              index=index, tables=tables, sketch=sketch)
+                              index=index, tables=tables, sketch=sketch,
+                              kernels=kernels)
     logits = ly.logits_fn(params, y, cfg)
     return logits, new_cache
 
@@ -473,7 +492,8 @@ def prefill(params: Params, batch: dict, cfg: ModelConfig
 
 def prefill_chunk(params: Params, cache: dict, tokens: jax.Array,
                   table: jax.Array, start: jax.Array, cfg: ModelConfig,
-                  sketch: Optional[dict] = None) -> dict:
+                  sketch: Optional[dict] = None,
+                  kernels: Optional[bool] = None) -> dict:
     """Chunked prefill step: write KV rows for absolute positions
     [start, start + C) into the paged pool through the slot's
     (blocks_per_slot,) block-table row ``table``, attending the chunk
@@ -491,5 +511,6 @@ def prefill_chunk(params: Params, cache: dict, tokens: jax.Array,
     """
     x = ly.embed_tokens(params["embed"], tokens)
     _, _, new_cache = forward(params, x, cfg, mode="chunk", cache=cache,
-                              index=start, tables=table, sketch=sketch)
+                              index=start, tables=table, sketch=sketch,
+                              kernels=kernels)
     return new_cache

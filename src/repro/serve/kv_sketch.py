@@ -122,7 +122,6 @@ def fold_pool(pool: Dict[str, jax.Array], tail: Dict[str, jax.Array],
     (B,) rows to fold, a multiple of the block size, <= ``fold_cap``
     (static).  All arrays traced — one compilation covers every fold.
     """
-    L = pool["k"].shape[0]
     NB, bs = pool["k"].shape[1], pool["k"].shape[2]
     B = tables.shape[0]
     F = int(fold_cap)
@@ -255,7 +254,6 @@ def fold_rows(k: jax.Array, v: jax.Array, positions: jax.Array,
     (B, n, K, hd) at absolute ``positions`` (n,) -> tail {"k","v"}
     (B, Z, cols, K, hd).  Shares row_buckets_signs with fold_pool, so the
     two folds agree bitwise for the same rows."""
-    Z = coeffs.shape[0]
     bk, sg = row_buckets_signs(coeffs, positions.astype(jnp.int32), cols,
                                signed=True)                       # (Z, n)
     cols_iota = jnp.arange(cols, dtype=jnp.int32)

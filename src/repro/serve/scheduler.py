@@ -102,6 +102,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, ServeConfig
+from repro.kernels import ops as kops
 from repro.models import transformer as tf
 from repro.models.draft import Draft, make_draft
 from repro.serve import kv_sketch as kvs
@@ -244,6 +245,13 @@ class SlotScheduler:
         self.temperature = float(temperature)   # default for requests
         self.is_kv = cfg.family in KV_FAMILIES
         sv = self.serve
+        # paged-attention implementation, resolved ONCE to a static bool
+        # (None = auto: Pallas kernels on TPU, jnp gather path elsewhere)
+        # and baked into every compiled chunk below — layers never
+        # re-detect, so the chunks stay one-compilation-per-engine
+        self.use_kernels = (kops.default_use_pallas()
+                            if sv.paged_kernels is None
+                            else bool(sv.paged_kernels)) and self.is_kv
         B = sv.max_batch
         # speculative decode: an explicit draft wins; else derive one per
         # the serve knobs (None when spec_k == 0 or the family has no KV)
@@ -386,12 +394,14 @@ class SlotScheduler:
                                           donate_argnums=(0,))
             else:
                 self._prefill_chunk = jax.jit(
-                    functools.partial(tf.prefill_chunk, cfg=cfg),
+                    functools.partial(tf.prefill_chunk, cfg=cfg,
+                                      kernels=self.use_kernels),
                     donate_argnums=(1,))
                 if self.draft is not None:
                     self._draft_prefill_chunk = jax.jit(
                         functools.partial(tf.prefill_chunk,
-                                          cfg=self.draft.cfg),
+                                          cfg=self.draft.cfg,
+                                          kernels=self.use_kernels),
                         donate_argnums=(1,))
             # copy-on-write block fork: copy one physical block's rows
             # (target AND draft pools) to a fresh block, device-side
@@ -452,6 +462,7 @@ class SlotScheduler:
         is_kv = self.is_kv
         sample = self._make_sampler()
         sketch_on = self.sketch_on
+        kernels = self.use_kernels
         if sketch_on:
             onehot, coeffs = self.tail_onehot, self.tail_coeffs
             fold_cap = self.fold_cap
@@ -466,7 +477,8 @@ class SlotScheduler:
                 cache, cur, pos, remaining, keys = carry
                 running = remaining > 0
                 logits, cache = tf.decode_step(params, cache, cur, pos, cfg,
-                                               tables=tables)
+                                               tables=tables,
+                                               kernels=kernels)
                 lg = logits[:, :cfg.vocab_size].astype(jnp.float32)
                 keys, nxt = sample(keys, lg, temp, top_k)
                 nxt = nxt.astype(jnp.int32)
@@ -508,7 +520,8 @@ class SlotScheduler:
                 cache, cur, pos, remaining, keys = carry
                 running = remaining > 0
                 logits, cache = tf.decode_step(params, cache, cur, pos, cfg,
-                                               tables=tables, sketch=sk)
+                                               tables=tables, sketch=sk,
+                                               kernels=kernels)
                 lg = logits[:, :cfg.vocab_size].astype(jnp.float32)
                 keys, nxt = sample(keys, lg, temp, top_k)
                 nxt = nxt.astype(jnp.int32)
@@ -542,7 +555,8 @@ class SlotScheduler:
                       "fold_cap": self.fold_cap}
         return build_spec_chunk(self.cfg, self.draft.cfg,
                                 self.serve.decode_chunk, self.spec_max,
-                                self._make_sampler(), sketch=sketch)
+                                self._make_sampler(), sketch=sketch,
+                                kernels=self.use_kernels)
 
     def _make_sketch_prefill(self, model_cfg: ModelConfig, is_draft: bool):
         """Jitted sketched prefill chunk: the legacy chunk plus the
@@ -553,6 +567,7 @@ class SlotScheduler:
         chunk's (the two-span select picks the exact output and the KV
         scatter is untouched)."""
         onehot = self.tail_onehot
+        kernels = self.use_kernels
 
         def spc(params, pool, tail_full, tok, table, start, slot,
                 fold_base):
@@ -561,7 +576,8 @@ class SlotScheduler:
                 tail_full)
             sk = {"fold_base": fold_base[None], "onehot": onehot}
             nc = tf.prefill_chunk(params, {"kv": pool, "tail": tail}, tok,
-                                  table, start, model_cfg, sketch=sk)
+                                  table, start, model_cfg, sketch=sk,
+                                  kernels=kernels)
             return nc["kv"]
 
         return jax.jit(spc, donate_argnums=(1,))

@@ -42,7 +42,7 @@ from repro.serve import kv_sketch as kvs
 
 def build_spec_chunk(cfg: ModelConfig, draft_cfg: ModelConfig,
                      decode_chunk: int, spec_max: int, sample,
-                     sketch=None):
+                     sketch=None, kernels=None):
     """Build the speculative decode chunk: ``decode_chunk`` rounds of
     propose/verify/commit over all slots, ONE compilation for the
     engine's lifetime.  ``sample`` is the scheduler's per-slot sampler
@@ -60,6 +60,13 @@ def build_spec_chunk(cfg: ModelConfig, draft_cfg: ModelConfig,
     through positions the scheduler has already verified past).  Rounds
     then run two-span attention — draft propose and target verify both
     see exact window + sketched tail.
+
+    ``kernels`` (static) routes draft micro-steps and the target verify
+    through the flash-decode paged Pallas kernels
+    (kernels/paged_attention.py); the kernel's verify rows are bitwise
+    the kernel's single-token decode rows, so greedy spec identity holds
+    on either implementation — but only when plain and speculative
+    engines resolve the SAME choice, which the scheduler guarantees.
     """
     K = spec_max
     V = cfg.vocab_size
@@ -88,7 +95,8 @@ def build_spec_chunk(cfg: ModelConfig, draft_cfg: ModelConfig,
                 dkv, tok = c
                 lg, dkv = tf.decode_step(draft_params, dkv, tok,
                                          pos + i, draft_cfg,
-                                         tables=tables, sketch=sk)
+                                         tables=tables, sketch=sk,
+                                         kernels=kernels)
                 nxt = jnp.argmax(lg[:, :V].astype(jnp.float32),
                                  axis=-1).astype(jnp.int32)
                 return (dkv, nxt[:, None]), tok[:, 0]
@@ -99,7 +107,8 @@ def build_spec_chunk(cfg: ModelConfig, draft_cfg: ModelConfig,
 
             # -- target: verify all K+1 positions at once -------------
             logits, kv = tf.verify_step(params, kv, vtok, pos, cfg,
-                                        tables=tables, sketch=sk)
+                                        tables=tables, sketch=sk,
+                                        kernels=kernels)
             lg = logits[..., :V].astype(jnp.float32)  # (B, K+1, V)
             greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
 

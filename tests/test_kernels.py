@@ -1,5 +1,12 @@
 """Pallas kernel validation: shape/dtype sweeps against the pure-jnp
-oracles (interpret mode executes the kernel body on CPU)."""
+oracles (interpret mode executes the kernel body on CPU).
+
+The CI kernel-oracle matrix job selects one kernel family per matrix
+entry with ``pytest tests/test_kernels.py -k <family>`` — every
+kernel/ref pair in ``kernels/ref.py`` has at least one test here whose
+name contains its family (count_sketch, unsketch, sketch_update,
+kv_tail, paged_attention), so no kernel can drift from its oracle
+unexercised."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,8 +14,10 @@ import pytest
 
 from repro.kernels import ref
 from repro.kernels.count_sketch import count_sketch
+from repro.kernels.paged_attention import paged_attention
 from repro.kernels.unsketch import unsketch
-from repro.kernels.ops import count_sketch_op, unsketch_op
+from repro.kernels.ops import (count_sketch_op, paged_attention_op,
+                               unsketch_op)
 
 SHAPES = [(1, 64, 32), (4, 1000, 256), (2, 300, 64), (8, 4096, 512),
           (1, 50, 300), (3, 128, 128)]
@@ -79,3 +88,200 @@ def test_ops_dispatch():
     a = unsketch_op(y, h, s, use_pallas=True)
     b = unsketch_op(y, h, s, use_pallas=False)
     np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# sketch_update / kv_tail kernels vs ref (pair coverage for the CI matrix;
+# deeper sweeps live in test_sketch_opt.py / test_kv_sketch.py)
+# ---------------------------------------------------------------------------
+
+
+def test_sketch_update_matches_ref():
+    from repro.kernels.sketch_update import sketch_update
+    from repro.sketch.hashing import cached_coeffs
+
+    rng = np.random.RandomState(0)
+    n, R, C = 700, 3, 128
+    g = jnp.asarray(rng.randn(n).astype(np.float32))
+    m_t = jnp.asarray(rng.randn(R, C).astype(np.float32))
+    v_t = jnp.abs(jnp.asarray(rng.randn(R, C).astype(np.float32)))
+    cm, cv = cached_coeffs(3, R), cached_coeffs(5, R)
+    got = sketch_update(g, m_t, v_t, cm, cv, b1=0.9, b2=0.95)
+    want = ref.sketch_update_ref(g, m_t, v_t, cm, cv, 0.9, 0.95)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_kv_tail_fold_matches_ref():
+    from repro.kernels import kv_sketch as kk
+    from repro.sketch.hashing import cached_coeffs
+
+    rng = np.random.RandomState(2)
+    Z, C, D, N, T = 3, 32, 48, 90, 160
+    coeffs = cached_coeffs(7, Z)
+    rows = jnp.asarray(rng.randn(N, D).astype(np.float32))
+    pos = jnp.asarray(rng.randint(0, T, (N,)).astype(np.int32))
+    tail = jnp.asarray(rng.randn(Z, C, D).astype(np.float32))
+    got = kk.tail_fold(rows, pos, tail, coeffs, bN=32, bC=32)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref.kv_tail_fold_ref(rows, pos, tail,
+                                                         coeffs)),
+        atol=1e-4)
+
+
+def test_kv_tail_scores_matches_ref():
+    from repro.kernels import kv_sketch as kk
+    from repro.sketch.hashing import cached_coeffs
+
+    rng = np.random.RandomState(3)
+    Z, C, D, N, T = 3, 32, 48, 20, 130
+    coeffs = cached_coeffs(11, Z)
+    q = jnp.asarray(rng.randn(N, D).astype(np.float32))
+    tail_k = jnp.asarray(rng.randn(Z, C, D).astype(np.float32))
+    got = kk.tail_scores(q, tail_k, coeffs, T=T, bN=16, bT=64)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref.kv_tail_scores_ref(q, tail_k,
+                                                           coeffs, T)),
+        atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# paged attention (flash-decode over block tables)
+# ---------------------------------------------------------------------------
+
+# (B, Sq, K, R, hd, NB, bs, nb): decode-, verify- and chunk-shaped cases
+PAGED_SHAPES = [
+    (3, 1, 2, 3, 16, 12, 8, 4),     # single-token decode, GQA
+    (2, 4, 2, 2, 32, 10, 4, 5),     # speculative verify (C = 4)
+    (1, 16, 1, 4, 16, 8, 8, 6),     # chunked prefill (one slot), MQA
+    (4, 3, 3, 1, 8, 20, 16, 3),     # R == 1 (MHA-as-GQA degenerate)
+]
+
+
+def _paged_inputs(B, Sq, K, R, hd, NB, bs, nb, seed=0,
+                  dtype=jnp.bfloat16):
+    """Ragged per-slot geometry: every slot gets its own start position
+    (some mid-block, some spanning several blocks), slot 0 gets an
+    invalidated table row, and fold_base mixes zero / nonzero."""
+    rng = np.random.RandomState(seed)
+    q = jnp.asarray(rng.randn(B, Sq, K, R, hd), dtype)
+    kp = jnp.asarray(rng.randn(NB, bs, K, hd), dtype)
+    vp = jnp.asarray(rng.randn(NB, bs, K, hd), dtype)
+    tables = jnp.asarray(
+        rng.permutation(NB)[:B * nb].reshape(B, nb)
+        if B * nb <= NB else rng.randint(0, NB, (B, nb)), jnp.int32)
+    tables = tables.at[0, nb - 1].set(NB)          # invalidated row
+    start = jnp.asarray(rng.randint(0, nb * bs - Sq, (B,)), jnp.int32)
+    fb = jnp.asarray([0] * (B - B // 2) + [bs] * (B // 2), jnp.int32)
+    fb = jnp.minimum(fb, start)    # window always contains the query row
+    return q, kp, vp, tables, start, fb
+
+
+@pytest.mark.parametrize("shape", PAGED_SHAPES)
+def test_paged_attention_matches_ref(shape):
+    """Interpret-mode kernel vs the jnp online-softmax oracle: the block
+    loop is op-for-op identical, so the statistics agree to ~bitwise
+    (asserted at rtol 1e-5, well below the acceptance bar)."""
+    got = paged_attention(*_paged_inputs(*shape))
+    want = ref.paged_attention_ref(*_paged_inputs(*shape))
+    for name, a, b in zip("m l acc".split(), got, want):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6, err_msg=name)
+
+
+def test_paged_attention_ragged_lengths_dense_oracle():
+    """Normalized kernel output vs a full-softmax f32 oracle computed
+    per slot over the gathered span — checks the mask semantics (per-row
+    causal bound, fold_base lower bound, dead blocks) rather than the
+    update equations."""
+    B, Sq, K, R, hd, NB, bs, nb = 2, 4, 2, 2, 16, 10, 4, 5
+    q, kp, vp, tables, start, fb = _paged_inputs(B, Sq, K, R, hd, NB, bs,
+                                                 nb, seed=5)
+    m, l, acc = paged_attention(q, kp, vp, tables, start, fb)
+    out = np.asarray(acc / jnp.maximum(l, 1e-30)[..., None])
+    S = nb * bs
+    kt = np.asarray(jnp.take(kp, tables, axis=0, mode="fill",
+                             fill_value=0), np.float32).reshape(B, S, K, hd)
+    vt = np.asarray(jnp.take(vp, tables, axis=0, mode="fill",
+                             fill_value=0), np.float32).reshape(B, S, K, hd)
+    qf = np.asarray(q, np.float32)
+    kpos = np.arange(S)
+    blk_ok = np.repeat(np.asarray(tables) < NB, bs).reshape(B, S)
+    scale = 1.0 / np.sqrt(hd)
+    for b in range(B):
+        for i in range(Sq):
+            live = ((kpos <= int(start[b]) + i)
+                    & (kpos >= int(fb[b])) & blk_ok[b])
+            for z in range(K):
+                for r in range(R):
+                    s = kt[b, :, z] @ qf[b, i, z, r] * scale
+                    s = np.where(live, s, -1e30)
+                    w = np.where(live, np.exp(s - s.max()), 0.0)
+                    o = (w @ vt[b, :, z]) / max(w.sum(), 1e-30)
+                    np.testing.assert_allclose(out[b, z, r, i], o,
+                                               rtol=2e-2, atol=2e-2)
+
+
+def test_paged_attention_invalid_rows_drop():
+    """Pool blocks behind invalidated table entries (>= NB) contribute
+    nothing: scribbling huge values into every block the tables do NOT
+    reference — including the block an invalidated entry would clamp to
+    — leaves the statistics unchanged."""
+    B, Sq, K, R, hd, NB, bs, nb = 2, 2, 2, 2, 16, 12, 4, 3
+    q, kp, vp, tables, start, fb = _paged_inputs(B, Sq, K, R, hd, NB, bs,
+                                                 nb, seed=7)
+    ref_out = paged_attention(q, kp, vp, tables, start, fb)
+    used = set(np.asarray(tables)[np.asarray(tables) < NB].tolist())
+    unused = [j for j in range(NB) if j not in used]
+    assert unused, "fixture must leave unreferenced pool blocks"
+    kp2, vp2 = np.asarray(kp, np.float32), np.asarray(vp, np.float32)
+    kp2[unused] = 1e4
+    vp2[unused] = -1e4
+    got = paged_attention(q, jnp.asarray(kp2, kp.dtype),
+                          jnp.asarray(vp2, vp.dtype), tables, start, fb)
+    for a, b in zip(ref_out, got):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_paged_attention_decode_rows_bitwise_match_verify():
+    """A single-token decode call at position start + i reproduces row i
+    of the multi-query verify call BITWISE — the kernel-side anchor that
+    keeps greedy speculative decode identical to plain greedy decode."""
+    B, Sq, K, R, hd, NB, bs, nb = 2, 4, 2, 2, 16, 10, 4, 5
+    q, kp, vp, tables, start, fb = _paged_inputs(B, Sq, K, R, hd, NB, bs,
+                                                 nb, seed=9)
+    mv, lv, av = paged_attention(q, kp, vp, tables, start, fb)
+    for i in range(Sq):
+        m1, l1, a1 = paged_attention(q[:, i:i + 1], kp, vp, tables,
+                                     start + i, fb)
+        np.testing.assert_array_equal(np.asarray(m1[..., 0]),
+                                      np.asarray(mv[..., i]))
+        np.testing.assert_array_equal(np.asarray(l1[..., 0]),
+                                      np.asarray(lv[..., i]))
+        np.testing.assert_array_equal(np.asarray(a1[..., 0, :]),
+                                      np.asarray(av[..., i, :]))
+
+
+def test_paged_attention_ops_dispatch():
+    shape = PAGED_SHAPES[1]
+    args = _paged_inputs(*shape, seed=11)
+    got = paged_attention_op(*args, use_pallas=True)
+    want = paged_attention_op(*args, use_pallas=False)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_paged_attention_traced_start():
+    """chunk_attention passes a TRACED start offset — one compilation
+    must serve every offset, so the kernel has to accept start/fold_base
+    as runtime values."""
+    shape = PAGED_SHAPES[2]
+    q, kp, vp, tables, start, fb = _paged_inputs(*shape, seed=13)
+
+    calls = jax.jit(lambda s: paged_attention(q, kp, vp, tables, s, fb))
+    a = calls(start)
+    b = calls(start + 4)
+    assert calls._cache_size() == 1
+    assert not np.array_equal(np.asarray(a[0]), np.asarray(b[0]))
