@@ -14,7 +14,10 @@ One row per served family — transformer (dense) vs recurrent (ssm /
 hybrid) — so the slot scheduler's two state layouts are measured
 separately, plus a ``prefill_hit`` row timing a cached-prefix request
 whose uncached suffix spans multiple prefill buckets (the chunked-prefill
-path) against the equivalent cold miss.
+path) against the equivalent cold miss, and an ``async_stream`` row
+driving the async front-end open-loop (Poisson arrivals, streamed
+tokens, mid-stream cancellations) to report TTFT and p50/p99
+inter-token latency with a zero-leaked-blocks assert at drain.
 
 Reports steady-state decode throughput (compile excluded via a warmup
 drain) and asserts the engine's contracts: one decode compilation for the
@@ -306,6 +309,100 @@ def _paged_kernel(arch: str, n_requests: int, prompt_len: int,
          f"backend={jax.default_backend()}")
 
 
+def _async_stream(arch: str, n_requests: int, n_prefixes: int,
+                  prefix_len: int, max_tail: int, max_new: int,
+                  max_batch: int, max_seq: int, rate: float,
+                  cancel_frac: float) -> None:
+    """Open-loop async serving latency: Poisson arrivals through the
+    ``AsyncServeEngine`` pump, tokens streamed per decode chunk, a
+    fraction of clients hanging up mid-stream.
+
+    Reports time-to-first-token and p50/p99 inter-token latency (per
+    streamed token, wall clock — tokens inside one delivered chunk are
+    near-zero apart, the p99 is the chunk cadence) alongside tok/s.
+    Asserts the pump's contracts: still ONE decode compilation across
+    admission / cancellation / drain, at least one cancellation actually
+    landed mid-flight, and ZERO leaked pool blocks at drain — every
+    reserved block is accounted to the prefix cache once all slots
+    retire."""
+    import asyncio
+
+    from repro.serve.frontend import AsyncServeEngine
+
+    cfg = reduced_config(arch)
+    k_params, _ = jax.random.split(jax.random.PRNGKey(0))
+    params = M.init_params(k_params, cfg)
+    serve = dataclasses.replace(
+        cfg.serve, max_batch=max_batch, max_seq=max_seq,
+        prefix_block=prefix_len, admit_threshold=2)
+    sched = SlotScheduler(cfg, params, serve=serve)
+    rng = np.random.RandomState(0)
+    # compile warmup (closed batch) — the async pump runs the same chunk
+    sched.run(make_request_stream(cfg, rng, max_batch, n_prefixes,
+                                  prefix_len, max_tail, max_new,
+                                  rid0=10_000))
+    # greedy stream: cancellation must land between chunk deliveries, so
+    # budgets span several decode chunks
+    assert max_new > 2 * serve.decode_chunk, (max_new, serve.decode_chunk)
+    reqs = make_request_stream(cfg, rng, n_requests, n_prefixes,
+                               prefix_len, max_tail, max_new)
+    front = AsyncServeEngine(scheduler=sched)
+    rng_arr = np.random.RandomState(11)
+
+    async def go():
+        ttfts, itls, done = [], [], []
+
+        async def consume(handle, t_submit, cancel_after):
+            n, prev = 0, 0.0
+            async for _tok in handle.stream():
+                now = time.monotonic()
+                if n == 0:
+                    ttfts.append(now - t_submit)
+                else:
+                    itls.append(now - prev)
+                prev = now
+                n += 1
+                if cancel_after is not None and n >= cancel_after:
+                    handle.cancel()
+            done.append(handle.completion)
+
+        tasks = []
+        for r in reqs:
+            h = await front.submit(r.tokens, max_new=r.max_new, rid=r.rid)
+            cancel_after = (max(1, r.max_new // 2)
+                            if rng_arr.rand() < cancel_frac else None)
+            tasks.append(asyncio.ensure_future(
+                consume(h, time.monotonic(), cancel_after)))
+            await asyncio.sleep(float(rng_arr.exponential(1.0 / rate)))
+        await asyncio.gather(*tasks)
+        await front.drain()
+        return ttfts, itls, done
+
+    t0 = time.time()
+    ttfts, itls, done = asyncio.run(go())
+    dt = time.time() - t0
+    toks = sum(len(c.tokens) for c in done)
+    st = sched.stats()
+    assert st.decode_compilations == 1, st.decode_compilations
+    n_cancel = sum(1 for c in done if c.status == "cancelled")
+    assert n_cancel >= 1, "no cancellation landed mid-flight"
+    assert toks < n_requests * max_new, "cancelled clients got full budgets"
+    # zero-leak contract: with every slot retired, reserved pool blocks
+    # are exactly the prefix cache's holdings (free + held == pool)
+    held = sched.prefix_cache.held_blocks()
+    leaked = sched.num_blocks - sched.alloc.free_count - held
+    assert leaked == 0, (sched.alloc.free_count, held, sched.num_blocks)
+    emit(f"serve/async_stream/{arch}", dt / max(toks, 1),
+         f"family={cfg.family};arrival_rate={rate};tok_s={toks/dt:.1f};"
+         f"ttft_p50_ms={np.percentile(ttfts, 50)*1e3:.1f};"
+         f"ttft_p99_ms={np.percentile(ttfts, 99)*1e3:.1f};"
+         f"itl_p50_ms={np.percentile(itls, 50)*1e3:.2f};"
+         f"itl_p99_ms={np.percentile(itls, 99)*1e3:.1f};"
+         f"cancelled={n_cancel};served={len(done)};"
+         f"blocks_leaked={leaked};"
+         f"decode_compiles={st.decode_compilations}")
+
+
 def _hit_latency(arch: str, prefix_len: int, suffix_len: int, max_new: int,
                  max_seq: int) -> None:
     """Cached-prefix request latency (suffix chunk-prefilled, spanning
@@ -362,6 +459,12 @@ def run(archs=("gemma-2b", "xlstm-1.3b", "zamba2-2.7b"),
                    else max_seq)
         _stream(arch, n_requests, n_prefixes, prefix_len, max_tail,
                 max_new, max_batch, fam_seq, sampled_frac)
+    # open-loop async serving: Poisson arrivals, streamed tokens, mid-
+    # stream hangups; TTFT + inter-token latency + zero-leak at drain
+    _async_stream("gemma-2b", n_requests=12, n_prefixes=n_prefixes,
+                  prefix_len=prefix_len, max_tail=max_tail, max_new=24,
+                  max_batch=max_batch, max_seq=kv_max_seq, rate=50.0,
+                  cancel_frac=0.5)
     # chunked-prefill hit latency: suffix spans multiple prefill buckets
     _hit_latency("gemma-2b", prefix_len=prefix_len, suffix_len=hit_suffix,
                  max_new=max_new, max_seq=max_seq)

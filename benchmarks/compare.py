@@ -46,7 +46,8 @@ TRACKED = ("tok_s", "hit_rate", "kv_peak_reserved_bytes",
            "kv_peak_used_bytes", "kv_reduction", "cached_bytes",
            "sketch_bytes_ratio", "spec_speedup", "accept_rate",
            "mean_accepted_run", "kv_tail_bytes", "tail_cosine",
-           "paged_kernel_speedup", "kernel_tok_s", "verify_us_kernel")
+           "paged_kernel_speedup", "kernel_tok_s", "verify_us_kernel",
+           "ttft_p50_ms", "ttft_p99_ms", "itl_p50_ms", "itl_p99_ms")
 
 # how many multiples of a row's measured run-to-run spread the per-row
 # gate allows before calling a regression (see --spread-files)
@@ -69,8 +70,19 @@ def _metrics(row: dict) -> dict:
 
 def row_spreads(paths: list) -> dict:
     """Per-row relative us_per_call spread across repeat artifacts:
-    (max - min) / min for every row present in ALL repeats."""
-    runs = [_load(p) for p in paths]
+    (max - min) / min for every row present in ALL repeats.  Unreadable
+    repeats are dropped with a ::warning:: (same philosophy as
+    --missing-baseline-ok: a poisoned historical artifact must not
+    block the current run); fewer than two usable repeats means no
+    spread estimate — rows keep the global --max-regress floor."""
+    runs = []
+    for p in paths:
+        try:
+            runs.append(_load(p))
+        except (OSError, ValueError, KeyError, TypeError) as e:
+            print(f"::warning title=bench spread file unusable::{p}: {e}")
+    if len(runs) < 2:
+        return {}
     out = {}
     for n in runs[0]:
         if all(n in r for r in runs):

@@ -19,8 +19,14 @@ Part 4 (attention families) turns on SKETCHED LONG-CONTEXT KV
 ``kv_sketch_window`` rows as exact paged blocks; older blocks fold into
 per-slot FCS tail tables and return to the pool, so a slot decodes a
 context several times larger than its reserved blocks could hold.
+Part 5 goes ASYNC (``serve/frontend.py``): ``AsyncServeEngine.submit``
+returns a StreamHandle, tokens arrive per decode chunk through
+``async for tok in handle.stream()``, and an impatient client's
+``handle.cancel()`` retires the slot and frees its blocks mid-flight —
+the survivors decode on, bitwise unperturbed.
 """
 import argparse
+import asyncio
 import dataclasses
 import time
 
@@ -30,6 +36,7 @@ import numpy as np
 from repro.configs.registry import ARCH_IDS, reduced_config
 from repro.models import model as M
 from repro.serve.engine import ServeEngine
+from repro.serve.frontend import AsyncServeEngine
 from repro.serve.scheduler import KV_FAMILIES, Request, SlotScheduler
 
 
@@ -130,6 +137,42 @@ def main():
         print(f"[sketch] tail tables {lc.kv_sketch_tail_bytes()}B fixed "
               f"vs dense {lc.kv_dense_equiv_bytes()}B; "
               f"decode compilations: {lc.decode_compilations}")
+
+    # -- Part 5: streaming + cancellation ---------------------------------
+    # the async front-end: submit() -> StreamHandle, tokens stream back
+    # per decode chunk, and hanging up mid-stream (cancel()) frees the
+    # slot and its pool blocks at the next pump boundary.  One request
+    # streams to the end; a second cancels itself after 4 tokens.
+    front = AsyncServeEngine(cfg, params, serve=serve)
+    p1 = rng.randint(0, cfg.vocab_size, (12,)).astype(np.int32)
+    p2 = rng.randint(0, cfg.vocab_size, (9,)).astype(np.int32)
+
+    async def stream_two():
+        patient = await front.submit(p1, max_new=10)
+        impatient = await front.submit(p2, max_new=24)
+
+        async def consume(handle, hang_up_after=None):
+            got = []
+            async for tok in handle.stream():
+                got.append(tok)
+                if hang_up_after and len(got) >= hang_up_after:
+                    handle.cancel()          # client went away
+            return got
+
+        full, partial = await asyncio.gather(consume(patient),
+                                             consume(impatient, 4))
+        return patient, impatient, full, partial
+
+    patient, impatient, full, partial = asyncio.run(stream_two())
+    print(f"[async] rid {patient.rid} streamed {full} "
+          f"(status {patient.completion.status})")
+    print(f"[async] rid {impatient.rid} hung up after {partial} "
+          f"(status {impatient.completion.status}, "
+          f"budget was 24)")
+    st = front.stats()
+    print(f"[async] engine stats: completed={st.completed} "
+          f"cancelled={st.cancelled}, pool free "
+          f"{st.blocks_free}/{st.pool_blocks} blocks")
 
 
 if __name__ == "__main__":

@@ -126,6 +126,25 @@ class ServeConfig:
     tail bytes are ~2 * rows/ratio of the folded KV bytes.
     ``kv_sketch_rows``: independent hash rows per tail table (median
     combine width; the FCS D parameter applied to KV).
+    ``queue_depth``: backpressure bound for the async front-end
+    (``serve/frontend.py``): at most this many submitted-but-unadmitted
+    requests may wait in the scheduler queue; an ``AsyncServeEngine.
+    submit`` beyond it awaits (never raises) until admissions/retirements
+    drain the queue.  The synchronous ``SlotScheduler.submit`` path is
+    not bounded — batch callers hand the whole request list over at once.
+    ``default_deadline_s``: seconds-from-submission deadline applied to
+    requests that don't carry their own; a request past its deadline is
+    expired — dropped from the queue, or retired mid-flight with the
+    tokens it produced so far (``Completion.status == "expired"``).
+    0 (default) means no deadline.
+    ``preemption``: allow the admission path to preempt a strictly
+    lower-priority running slot when a higher-priority request cannot be
+    admitted (no free slot, or the block pool can't serve it).  The
+    victim retires through the normal slot-retire + block-free path and
+    is requeued as a continuation request (prompt + tokens so far), so
+    its final output is unchanged — preemption trades its latency for
+    the high-priority request's.  True by default; deadline expiry works
+    regardless.
     ``paged_kernels``: attention implementation for the paged serve path
     (decode / speculative verify / chunked prefill).  None (default)
     auto-detects: the flash-decode Pallas kernels
@@ -158,6 +177,9 @@ class ServeConfig:
     kv_sketch_window: int = 0
     kv_sketch_ratio: int = 8
     kv_sketch_rows: int = 3
+    queue_depth: int = 64
+    default_deadline_s: float = 0.0
+    preemption: bool = True
     paged_kernels: Optional[bool] = None
 
 

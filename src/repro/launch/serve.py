@@ -6,7 +6,14 @@ continuous-batching engine, with prefix-cache hit stats.
 
 The stream mimics production traffic: a handful of shared "system prompt"
 prefixes with random per-request tails of mixed lengths, so the count-min
-admission filter has real heavy hitters to find.  Every family rides the
+admission filter has real heavy hitters to find.  By default requests are
+served closed-batch (submit all, drain); ``--arrival-rate R`` switches to
+an OPEN-LOOP Poisson arrival process through the async front-end
+(serve/frontend.py): requests arrive at R req/s on average, tokens
+stream back per decode chunk, ``--cancel-frac`` hangs up a fraction of
+clients mid-stream, and ``--deadline-s`` arms a per-request SLO (expired
+requests surface partial output).  Either way the driver exits with the
+engine's unified ``EngineStats`` snapshot.  Every family rides the
 slot scheduler — attention families through chunked prefill + the prefix
 cache, recurrent families (ssm/hybrid) through slot-inserted state.  Part
 of the stream can be sampled (``--sampled-frac``) to exercise mixed
@@ -23,6 +30,7 @@ default; pass ``--full`` for the full architecture.
 from __future__ import annotations
 
 import argparse
+import asyncio
 import dataclasses
 import time
 
@@ -31,6 +39,7 @@ import numpy as np
 
 from repro.configs.registry import ARCH_IDS, get_config, reduced_config
 from repro.models import model as M
+from repro.serve.frontend import AsyncServeEngine
 from repro.serve.scheduler import KV_FAMILIES, Request, SlotScheduler
 
 
@@ -58,6 +67,45 @@ def make_request_stream(cfg, rng: np.random.RandomState, n_requests: int,
             top_k=top_k if sampled else 0,
             seed=int(rng.randint(1 << 30)) if sampled else None))
     return reqs
+
+
+async def stream_poisson(front: AsyncServeEngine, reqs, rate: float,
+                         cancel_frac: float, deadline_s: float,
+                         rng: np.random.RandomState):
+    """Open-loop Poisson driver: submit ``reqs`` with exponential
+    inter-arrival gaps (mean 1/rate s), stream every response, and hang
+    up on a ``cancel_frac`` fraction of clients midway through their
+    budget.  Returns (completions, first_token_latencies) — arrival
+    pacing is wall-clock real, so TTFT numbers here include genuine
+    queueing delay, not just compute."""
+    results = []
+    ttfts = []
+
+    async def consume(handle, t_submit, cancel_after):
+        n = 0
+        async for _tok in handle.stream():
+            if n == 0:
+                ttfts.append(time.monotonic() - t_submit)
+            n += 1
+            if cancel_after is not None and n >= cancel_after:
+                handle.cancel()
+        results.append(handle.completion)
+
+    tasks = []
+    for r in reqs:
+        h = await front.submit(
+            r.tokens, max_new=r.max_new, temperature=r.temperature,
+            top_k=r.top_k, seed=r.seed,
+            deadline_s=(deadline_s if deadline_s > 0 else 0),
+            rid=r.rid)
+        cancel_after = (max(1, r.max_new // 2)
+                        if rng.rand() < cancel_frac else None)
+        tasks.append(asyncio.ensure_future(
+            consume(h, time.monotonic(), cancel_after)))
+        if rate > 0:
+            await asyncio.sleep(float(rng.exponential(1.0 / rate)))
+    await asyncio.gather(*tasks)
+    return results, ttfts
 
 
 def main():
@@ -102,6 +150,17 @@ def main():
                     help="Pallas flash-decode paged attention on the serve "
                          "path (auto = TPU only; 'on' forces the kernels — "
                          "interpret mode on CPU, slow but exact)")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="open-loop Poisson arrivals at this rate "
+                         "(req/s) through the async front-end; 0 = "
+                         "closed-batch (submit all, drain)")
+    ap.add_argument("--cancel-frac", type=float, default=0.0,
+                    help="fraction of streamed clients that hang up "
+                         "halfway through their budget (open-loop only)")
+    ap.add_argument("--deadline-s", type=float, default=0.0,
+                    help="per-request SLO deadline in seconds; expired "
+                         "requests surface partial output (open-loop "
+                         "only; 0 = none)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--full", action="store_true",
                     help="run the full architecture (default: reduced)")
@@ -142,53 +201,43 @@ def main():
             max_new=args.max_new))
 
     t0 = time.time()
-    done = sched.run(reqs)
+    if args.arrival_rate > 0:
+        front = AsyncServeEngine(scheduler=sched)
+        done, ttfts = asyncio.run(stream_poisson(
+            front, reqs, args.arrival_rate, args.cancel_frac,
+            args.deadline_s, np.random.RandomState(args.seed + 3)))
+    else:
+        done = sched.run(reqs)
+        ttfts = []
     dt = time.time() - t0
     toks = sum(len(c.tokens) for c in done)
     n_sampled = sum(1 for r in reqs if (r.temperature or 0) > 0)
     print(f"served {len(done)} requests ({n_sampled} sampled) / {toks} "
           f"tokens in {dt:.2f}s ({toks/dt:.1f} tok/s incl. compile)")
-    print(f"decode compilations: {sched.decode_compilations} "
-          f"(steps: {sched.decode_steps}), "
-          f"prefill compilations: {sched.prefill_compilations}")
+    if ttfts:
+        print(f"open loop: arrival_rate={args.arrival_rate}/s, "
+              f"ttft p50={np.percentile(ttfts, 50)*1e3:.0f}ms "
+              f"p99={np.percentile(ttfts, 99)*1e3:.0f}ms "
+              f"over {len(ttfts)} first tokens")
     if cfg.family in KV_FAMILIES:
         print(f"paged attention: "
               f"{'pallas kernels' if sched.use_kernels else 'jnp'} "
               f"(--paged-kernels {args.paged_kernels})")
-    if sched.spec_max:
-        print(f"speculative: spec_k={sched.spec_max} "
-              f"draft_depth={sched.draft.cfg.num_layers} "
-              f"(sketch_ratio={serve.draft_sketch_ratio}), "
-              f"acceptance_rate={sched.acceptance_rate:.2f} "
-              f"({sched.spec_accepted}/{sched.spec_proposed} proposals), "
-              f"mean_accepted_run={sched.mean_accepted_run:.2f} "
-              f"tokens/round over {sched.spec_rounds} rounds")
-    if cfg.family in KV_FAMILIES:
-        st = sched.prefix_cache.stats
-        print(f"prefix cache: hit_rate={st.hit_rate:.2f} "
-              f"({st.hits}/{st.lookups}), admitted={st.admitted}, "
-              f"evicted={st.evicted}, cached_bytes={st.bytes} "
-              f"(budget {serve.prefix_cache_bytes}), "
-              f"tracker_bytes={sched.prefix_cache.tracker_bytes()}")
-        print(f"paged KV: {sched.num_blocks} blocks x {sched.block_size} "
-              f"tokens, peak_reserved={sched.kv_peak_reserved_bytes()}B "
-              f"peak_used={sched.kv_peak_used_bytes()}B vs dense "
-              f"{sched.kv_dense_equiv_bytes()}B "
-              f"({sched.kv_dense_equiv_bytes() / max(sched.kv_peak_reserved_bytes(), 1):.1f}x)")
         if sched.sketch_on:
-            exact_b = sched.kv_sketch_exact_bytes()
-            tail_b = sched.kv_sketch_tail_bytes()
             print(f"kv sketch: window={serve.kv_sketch_window} rows "
                   f"(ratio={serve.kv_sketch_ratio}, "
                   f"rows={serve.kv_sketch_rows}, "
                   f"cols={sched.tail_cols}) — exact-window "
-                  f"{exact_b}B live + sketched-tail {tail_b}B fixed "
-                  f"vs dense {sched.kv_dense_equiv_bytes()}B")
+                  f"{sched.kv_sketch_exact_bytes()}B live + sketched-tail "
+                  f"{sched.kv_sketch_tail_bytes()}B fixed")
     else:
         print(f"recurrent family ({cfg.family}): slot-scheduled state, "
               f"prefix cache n/a")
+    # the unified observability snapshot — queue/slots, pool occupancy,
+    # prefix-cache hit rate, fold counts, speculative acceptance
+    print(sched.stats().format())
     print("first completions:",
-          [(c.rid, c.tokens[:6].tolist()) for c in done[:2]])
+          [(c.rid, c.status, c.tokens[:6].tolist()) for c in done[:2]])
 
 
 if __name__ == "__main__":

@@ -4,29 +4,42 @@ Layering:
   prefix_cache.py — count-min (CSVec) gated prefix admission; entries are
                     refcounted paged-pool block ids under a hard byte
                     budget (zero-copy prefix sharing)
+  kv_sketch.py    — sketched long-context KV: exact recent window +
+                    per-slot FCS tail tables, folded inside the chunk
   scheduler.py    — slot scheduler + BlockAllocator (paged-KV free list /
                     refcounts / copy-on-write forks) + the single
                     compiled lax.scan decode chunk with per-slot
                     position/active/sampling/spec_k state and block
                     tables; chunked prefill for attention families,
-                    slot-inserted recurrent state for ssm/hybrid
+                    slot-inserted recurrent state for ssm/hybrid.  The
+                    host loop is phase-split (admit_pending / dispatch /
+                    collect, cancel / preempt / expire_deadlines at pump
+                    boundaries) with host mirrors of per-slot state, so
+                    admission overlaps the in-flight device chunk
   speculative.py  — the speculative decode chunk (serve.spec_k > 0):
                     draft-propose (models/draft.py derived proposer) /
                     verify-all (transformer.verify_step) / commit-
                     accepted rounds, greedy-identical to plain decode
-  engine.py       — ServeEngine facade (batched generate API with
-                    per-request temperature/top-k/spec_k)
+  frontend.py     — AsyncServeEngine: the always-on asyncio pump over
+                    the phase API (submit -> StreamHandle, per-token
+                    streaming, cancellation, deadlines/priorities with
+                    preemption, bounded-queue backpressure)
+  engine.py       — ServeEngine facade (batched generate API, now a
+                    thin wrapper over the async front-end) + the
+                    unified EngineStats snapshot
 """
 from repro.serve.engine import GenerationResult, ServeEngine
+from repro.serve.frontend import AsyncServeEngine, StreamHandle
 from repro.serve.prefix_cache import (PrefixCacheStats, SketchPrefixCache,
                                       prefix_key)
 from repro.serve.scheduler import (KV_FAMILIES, RECURRENT_FAMILIES,
                                    BlockAllocator, Completion, DecodeState,
-                                   Request, SlotScheduler)
+                                   EngineStats, Request, SlotScheduler)
 
 __all__ = [
     "GenerationResult", "ServeEngine",
+    "AsyncServeEngine", "StreamHandle",
     "PrefixCacheStats", "SketchPrefixCache", "prefix_key",
     "KV_FAMILIES", "RECURRENT_FAMILIES", "BlockAllocator", "Completion",
-    "DecodeState", "Request", "SlotScheduler",
+    "DecodeState", "EngineStats", "Request", "SlotScheduler",
 ]

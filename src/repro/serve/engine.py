@@ -23,9 +23,19 @@ rounds become propose-K / verify-all / commit-accepted — ``generate``'s
 ``spec_k`` argument (scalar or per-request vector) opts individual
 requests up or down, and greedy output stays bitwise identical to plain
 decode either way.
+
+``generate`` itself is a THIN COMPATIBILITY WRAPPER over the async
+front-end (``serve.frontend.AsyncServeEngine``): each batch row becomes
+one streamed submission against the cached scheduler's pump, drained to
+completion inside an ``asyncio.run``.  Greedy batch output is bitwise
+identical to the streamed output — there is exactly one serving path.
+``ServeEngine.stats()`` returns the unified ``EngineStats`` snapshot
+(queue depth, pool occupancy, prefix-cache hit rate, fold counts,
+speculative acceptance) merged across the engine's schedulers.
 """
 from __future__ import annotations
 
+import asyncio
 import dataclasses
 from dataclasses import dataclass
 from typing import Optional, Sequence, Union
@@ -36,7 +46,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models.draft import make_draft
-from repro.serve.scheduler import Request, SlotScheduler
+from repro.serve.frontend import AsyncServeEngine
+from repro.serve.scheduler import EngineStats, SlotScheduler
 
 Per = Union[float, int, Sequence, jax.Array, np.ndarray]
 
@@ -64,6 +75,7 @@ class ServeEngine:
         self.max_seq = max_seq
         self.max_batch = max_batch
         self._schedulers = {}        # max_batch -> SlotScheduler
+        self._frontends = {}         # max_batch -> AsyncServeEngine
         self._draft = None           # derived once, shared by schedulers
         self._rid = 0
 
@@ -80,6 +92,7 @@ class ServeEngine:
         if self._schedulers and next(
                 iter(self._schedulers.values())).params is not self.params:
             self._schedulers.clear()
+            self._frontends.clear()  # they wrap the dropped schedulers
             self._draft = None       # derived from the old weights
         kb = self.max_batch or batch
         if kb not in self._schedulers:
@@ -93,6 +106,17 @@ class ServeEngine:
             self._schedulers[kb] = SlotScheduler(
                 self.cfg, self.params, serve=serve, draft=self._draft)
         return self._schedulers[kb]
+
+    def _frontend(self, batch: int) -> AsyncServeEngine:
+        """The async front-end wrapping the cached scheduler for this
+        slot count — ``generate`` is a thin compatibility facade over
+        it, so batch and streaming callers share one warmed-up engine
+        (one decode compilation, one prefix cache)."""
+        sched = self._scheduler(batch)    # may clear self._frontends
+        kb = self.max_batch or batch
+        if kb not in self._frontends:
+            self._frontends[kb] = AsyncServeEngine(scheduler=sched)
+        return self._frontends[kb]
 
     def generate(self, tokens: jax.Array, max_new: int = 32,
                  temperature: Per = 0.0, top_k: Per = 0,
@@ -114,7 +138,7 @@ class ServeEngine:
         that request's whole context exact."""
         B, S = tokens.shape
         assert S + max_new <= self.max_seq
-        sched = self._scheduler(B)
+        front = self._frontend(B)
         temps = _per_request(temperature, B, "temperature")
         ks = _per_request(top_k, B, "top_k")
         sks = (None if spec_k is None
@@ -122,24 +146,31 @@ class ServeEngine:
         kss = (None if kv_sketch is None
                else _per_request(kv_sketch, B, "kv_sketch"))
         prompts = np.asarray(tokens, np.int32)
-        reqs = []
-        for b in range(B):
-            # explicit key → per-slot keys fold in the BATCH ROW, not the
-            # engine-global rid: calling generate twice with the same key
-            # reproduces the same sampled tokens, and the scheduler's
-            # default key stream is left untouched for key=None calls
-            rk = (jax.random.fold_in(key, b) if key is not None else None)
-            reqs.append(Request(rid=self._rid, tokens=prompts[b],
-                                max_new=max_new,
-                                temperature=float(temps[b]),
-                                top_k=int(ks[b]), key=rk,
-                                spec_k=(None if sks is None
-                                        else int(sks[b])),
-                                kv_sketch=(None if kss is None
-                                           else bool(kss[b]))))
-            self._rid += 1
-        done = {c.rid: c for c in sched.run(reqs)}
-        out = np.stack([done[r.rid].tokens for r in reqs])
+        rids = list(range(self._rid, self._rid + B))
+        self._rid += B
+
+        async def go():
+            handles = []
+            for b in range(B):
+                # explicit key → per-slot keys fold in the BATCH ROW,
+                # not the engine-global rid: calling generate twice with
+                # the same key reproduces the same sampled tokens, and
+                # the scheduler's default key stream is left untouched
+                # for key=None calls
+                rk = (jax.random.fold_in(key, b)
+                      if key is not None else None)
+                handles.append(await front.submit(
+                    prompts[b], max_new=max_new,
+                    temperature=float(temps[b]), top_k=int(ks[b]),
+                    key=rk,
+                    spec_k=(None if sks is None else int(sks[b])),
+                    kv_sketch=(None if kss is None else bool(kss[b])),
+                    deadline_s=0,         # batch callers never expire
+                    rid=rids[b]))
+            return [await h.result() for h in handles]
+
+        done = asyncio.run(go())
+        out = np.stack([c.tokens for c in done])
         return GenerationResult(tokens=jnp.asarray(out), prompt_len=S)
 
     # ------------------------------------------------------------------
@@ -150,7 +181,10 @@ class ServeEngine:
         return sum(s.decode_compilations
                    for s in self._schedulers.values())
 
-    def prefix_cache_stats(self):
-        return {k: s.prefix_cache.stats
-                for k, s in self._schedulers.items()
-                if s.prefix_cache is not None}
+    def stats(self) -> EngineStats:
+        """Unified observability snapshot across every live scheduler:
+        queue depth, slot occupancy, pool occupancy/peak, prefix-cache
+        hit rate, fold counts, speculative acceptance.  Replaces the
+        old per-scheduler ``prefix_cache_stats`` dict."""
+        return EngineStats.merge(
+            [s.stats() for s in self._schedulers.values()])

@@ -36,6 +36,16 @@ zero, so the merge is total.
 Everything here is dependency-light (configs + sketch.hashing only) so
 models/layers.py can import it; kernels/kv_sketch.py carries the Pallas
 fold+query kernels with kernels/ref.py oracles delegating to this math.
+
+Fold points are PUMP-STEP BOUNDARIES: the scheduler plans each chunk's
+fold lengths from its host position mirrors (``_plan_folds``, at
+dispatch), the chunk folds at its head, and the freed blocks leave the
+slot's table at dispatch time too (``_finish_folds`` — the sentinel
+writes enqueue after the chunk in device-stream order).  Only COMMITTED
+rows ever fold, so the async pump (serve/frontend.py) can cancel or
+preempt a sketched slot at any boundary: the tail tables are per-slot
+state, zeroed lazily at the next admission, and the fold frontier
+resets with the slot.
 """
 from __future__ import annotations
 

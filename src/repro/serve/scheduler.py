@@ -90,12 +90,30 @@ is token-for-token identical to plain greedy decode; sampled slots fall
 back to one verified token per round drawn with their own key.  A spec
 engine reserves ``spec_k`` extra rows per slot so overhang writes stay
 inside the slot's own blocks.
+
+The host loop is decomposed into PUMP PHASES — ``admit_pending`` /
+``dispatch`` / ``collect``, plus ``cancel`` / ``preempt`` /
+``expire_deadlines`` at pump boundaries.  ``step()`` composes them
+synchronously (the classic closed-batch round); serve/frontend.py's
+``AsyncServeEngine`` drives them as an always-on pump instead:
+``dispatch`` launches the compiled chunk asynchronously (jax returns
+futures), host-side admission and chunked prefill run while the device
+crunches, and ``collect`` is the round's single host-device sync point.
+Retirement and fold planning read HOST mirrors of the per-slot position
+and budget — never device arrays — so the overlap is real.  SLO
+scheduling rides the same machinery: per-request ``priority`` orders
+the admission queue, ``deadline`` expires requests (queued or
+mid-flight, surfacing partial output), and a full engine preempts a
+strictly lower-priority slot by requeueing it as a continuation whose
+prompt carries the tokens already served.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
+import time
 from dataclasses import dataclass
-from typing import Any, Dict, List, NamedTuple, Optional, Sequence
+from typing import Any, Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -134,14 +152,129 @@ class Request:
     # engine (on when cfg.serve.kv_sketch_window > 0); False opts this
     # request out — it reserves full exact coverage and never folds.
     kv_sketch: Optional[bool] = None
+    # SLO scheduling (serve/frontend.py): higher priority admits first
+    # and may preempt strictly lower-priority running slots when the
+    # engine is full (cfg.serve.preemption); ``deadline`` is an absolute
+    # time.monotonic() timestamp past which the request is expired —
+    # dropped from the queue, or retired mid-flight with whatever tokens
+    # it has (Completion.status == "expired").
+    priority: int = 0
+    deadline: Optional[float] = None
 
 
 @dataclass
 class Completion:
     rid: int
     prompt_len: int
-    tokens: np.ndarray           # (max_new,) int32 generated
+    tokens: np.ndarray           # (<= max_new,) int32 generated
     prefix_hit: bool
+    # "ok" — full budget served; "cancelled" — caller cancelled
+    # mid-flight; "expired" — deadline passed (tokens hold the partial
+    # output in both non-ok cases).  Preemption never surfaces here: a
+    # preempted request is requeued as a continuation and completes "ok".
+    status: str = "ok"
+
+
+@dataclass
+class EngineStats:
+    """One flat observability snapshot of a scheduler (or, merged, of a
+    whole engine): queue pressure, slot occupancy, pool high-water
+    marks, prefix-cache effectiveness, sketch folding and speculative
+    acceptance — everything launch/serve.py prints at exit and the
+    async front-end exposes for monitoring.  ``merge`` sums snapshots
+    across schedulers; ratio fields recompute from the summed counts."""
+    queue_depth: int = 0
+    active_slots: int = 0
+    max_batch: int = 0
+    completed: int = 0            # all statuses, incl. the below
+    cancelled: int = 0
+    expired: int = 0
+    preempted: int = 0            # preemption events (requests requeued)
+    decode_steps: int = 0
+    decode_compilations: int = 0
+    prefill_compilations: int = 0
+    pool_blocks: int = 0
+    block_size: int = 0
+    blocks_reserved: int = 0
+    blocks_free: int = 0
+    blocks_peak: int = 0
+    kv_reserved_bytes: int = 0
+    kv_peak_reserved_bytes: int = 0
+    kv_peak_used_bytes: int = 0
+    kv_dense_equiv_bytes: int = 0
+    prefix_lookups: int = 0
+    prefix_hits: int = 0
+    prefix_admitted: int = 0
+    prefix_evicted: int = 0
+    prefix_cached_bytes: int = 0
+    fold_rows: int = 0            # exact-window rows folded into tails
+    kv_sketch_tail_bytes: int = 0
+    spec_rounds: int = 0
+    spec_proposed: int = 0
+    spec_accepted: int = 0
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        return self.prefix_hits / max(self.prefix_lookups, 1)
+
+    @property
+    def acceptance_rate(self) -> float:
+        return self.spec_accepted / max(self.spec_proposed, 1)
+
+    @property
+    def mean_accepted_run(self) -> float:
+        return ((self.spec_accepted + self.spec_rounds)
+                / max(self.spec_rounds, 1))
+
+    @staticmethod
+    def merge(parts: Sequence["EngineStats"]) -> "EngineStats":
+        out = EngineStats()
+        for p in parts:
+            for f in dataclasses.fields(EngineStats):
+                if f.name == "block_size":
+                    continue          # a geometry, not a count
+                setattr(out, f.name,
+                        getattr(out, f.name) + getattr(p, f.name))
+            out.block_size = max(out.block_size, p.block_size)
+        return out
+
+    def format(self) -> str:
+        """Human-readable multi-line report (the launch driver's exit
+        summary)."""
+        lines = [
+            f"queue={self.queue_depth} active={self.active_slots}/"
+            f"{self.max_batch} completed={self.completed} "
+            f"(cancelled={self.cancelled} expired={self.expired} "
+            f"preemptions={self.preempted})",
+            f"decode: steps={self.decode_steps} "
+            f"compilations={self.decode_compilations} "
+            f"(prefill: {self.prefill_compilations})",
+        ]
+        if self.pool_blocks:
+            lines.append(
+                f"paged KV: {self.pool_blocks} blocks x "
+                f"{self.block_size} tokens, reserved="
+                f"{self.blocks_reserved} (peak {self.blocks_peak}, "
+                f"free {self.blocks_free}) — "
+                f"{self.kv_peak_reserved_bytes}B peak vs dense "
+                f"{self.kv_dense_equiv_bytes}B")
+            lines.append(
+                f"prefix cache: hit_rate={self.prefix_hit_rate:.2f} "
+                f"({self.prefix_hits}/{self.prefix_lookups}), "
+                f"admitted={self.prefix_admitted}, "
+                f"evicted={self.prefix_evicted}, "
+                f"cached_bytes={self.prefix_cached_bytes}")
+        if self.fold_rows or self.kv_sketch_tail_bytes:
+            lines.append(
+                f"kv sketch: folded_rows={self.fold_rows}, "
+                f"tail_bytes={self.kv_sketch_tail_bytes}")
+        if self.spec_rounds:
+            lines.append(
+                f"speculative: acceptance={self.acceptance_rate:.2f} "
+                f"({self.spec_accepted}/{self.spec_proposed}), "
+                f"mean_run={self.mean_accepted_run:.2f} over "
+                f"{self.spec_rounds} rounds")
+        return "\n".join(lines)
 
 
 class BlockAllocator:
@@ -276,6 +409,25 @@ class SlotScheduler:
         # scheduler round and spuriously cross admit_threshold)
         self._admit_memo: Dict[int, Optional[int]] = {}
         self._slot_rows: List[int] = [0] * B
+        # host mirrors of device per-slot state, maintained at admission
+        # and collect(): the pump phases (fold planning, retirement,
+        # preemption) never read device arrays, so host bookkeeping for
+        # the next round overlaps the in-flight chunk instead of
+        # serializing on it
+        self._slot_pos: List[int] = [0] * B
+        self._slot_admit_seq: List[int] = [0] * B
+        self._admit_seq = 0
+        # rid -> (original prompt_len, tokens emitted before preemption,
+        # prefix_hit so far): a preempted slot's progress, folded back
+        # into its Completion when the requeued continuation retires
+        self._preempted: Dict[int, Tuple[int, List[int], bool]] = {}
+        # in-flight decode chunk (device futures) between dispatch() and
+        # collect(); exactly one chunk may be outstanding
+        self._inflight: Optional[Tuple[Any, Any]] = None
+        self.cancellations = 0
+        self.expirations = 0
+        self.preemptions = 0
+        self.fold_rows_total = 0
         # sketched long-context KV bookkeeping (host mirrors of the
         # device fold_base): first live logical block per slot, and
         # whether the slot's request opted into folding
@@ -671,7 +823,24 @@ class SlotScheduler:
                 f"request needs {need} KV blocks of {bs}, "
                 f"pool has {self.num_blocks} (raise "
                 f"cfg.serve.num_kv_blocks)")
-        self._queue.append(req)
+        self._enqueue(req, front=False)
+
+    def _enqueue(self, req: Request, front: bool) -> None:
+        """Priority-ordered queue insertion (descending priority, stable
+        FIFO within a band — default priority 0 is a plain FIFO).
+        ``front`` inserts at the HEAD of the request's priority band:
+        used for preempted continuations, which are the oldest work in
+        their band and must not lose their turn to later arrivals."""
+        pr = req.priority
+        if front:
+            i = 0
+            while i < len(self._queue) and self._queue[i].priority > pr:
+                i += 1
+        else:
+            i = len(self._queue)
+            while i > 0 and self._queue[i - 1].priority < pr:
+                i -= 1
+        self._queue.insert(i, req)
 
     def reseed(self, key: jax.Array) -> None:
         """Replace the base sampling key: per-slot keys for requests
@@ -803,6 +972,7 @@ class SlotScheduler:
                 self.alloc.unref(dead)
                 first_lblk += k
                 fold_base += k * bs
+                self.fold_rows_total += k * bs
                 n_elig -= k
             off += bucket
         return cache, slot_ids, first_lblk, True
@@ -1014,29 +1184,63 @@ class SlotScheduler:
         self._slot_req[slot] = req
         self._slot_out[slot] = []
         self._slot_hit[slot] = hit is not None
+        # host mirror of the device position: decode resumes at S - 1 and
+        # collect() advances the mirror by the emitted count per round
+        # (the chunk advances pos by exactly the tokens it emits), so
+        # fold planning / retirement never read device arrays
+        self._slot_pos[slot] = S - 1
+        self._slot_admit_seq[slot] = self._admit_seq
+        self._admit_seq += 1
         # host-side mirror for acceptance accounting: sampled slots never
         # accept proposals in-graph, so they don't count as speculating
         self._slot_spec[slot] = eff_spec if temp == 0.0 else 0
         return True
 
-    def _retire(self) -> List[Completion]:
-        done: List[Completion] = []
-        remaining = np.asarray(self._state.remaining)
-        freed = []
-        for s, req in enumerate(self._slot_req):
-            if req is not None and remaining[s] == 0:
-                done.append(Completion(
-                    rid=req.rid, prompt_len=len(req.tokens),
-                    tokens=np.asarray(self._slot_out[s][:req.max_new],
-                                      np.int32),
-                    prefix_hit=self._slot_hit[s]))
-                self._slot_req[s] = None
-                self._slot_out[s] = []
-                self._slot_spec[s] = 0
-                if self.is_kv:
-                    freed.append(s)
-        if freed:
-            # invalidate retired slots' table rows BEFORE their blocks can
+    def _complete(self, slot: int, status: str) -> Completion:
+        """Build the Completion for ``slot``'s occupant, folding in any
+        output the request emitted before an earlier preemption (a
+        preempted request is requeued as a continuation whose prompt is
+        the original prompt + the tokens already served — its Completion
+        reports the ORIGINAL prompt_len and the full output)."""
+        req = self._slot_req[slot]
+        out = list(self._slot_out[slot][:req.max_new])
+        hit = self._slot_hit[slot]
+        plen = len(req.tokens)
+        stash = self._preempted.pop(req.rid, None)
+        if stash is not None:
+            plen, prior, hit0 = stash
+            out = prior + out
+            hit = hit or hit0
+        return Completion(rid=req.rid, prompt_len=plen,
+                          tokens=np.asarray(out, np.int32),
+                          prefix_hit=hit, status=status)
+
+    def _complete_queued(self, req: Request, status: str) -> Completion:
+        """Completion for a request leaving the QUEUE (cancelled or
+        expired before admission); a preempted continuation surfaces the
+        tokens it emitted before eviction."""
+        plen, prior, hit = self._preempted.pop(
+            req.rid, (len(req.tokens), [], False))
+        self._admit_memo.pop(req.rid, None)
+        return Completion(rid=req.rid, prompt_len=plen,
+                          tokens=np.asarray(prior, np.int32),
+                          prefix_hit=hit, status=status)
+
+    def _release_slot_state(self, freed: List[int],
+                            deactivate: bool = False) -> None:
+        """Release every slot in ``freed`` — device tables, pool blocks,
+        host mirrors — shared by retirement, cancellation, expiry and
+        preemption.  ``deactivate`` additionally zeroes the device
+        ``remaining`` (mid-flight evictions; a naturally retired slot's
+        budget already reached zero on device)."""
+        if not freed:
+            return
+        if deactivate:
+            self._state = self._state._replace(
+                remaining=self._state.remaining.at[
+                    np.asarray(freed)].set(0))
+        if self.is_kv:
+            # invalidate the slots' table rows BEFORE their blocks can
             # be freed/reused: an idle slot still executes the decode
             # write every step, and only the sentinel makes it a no-op
             # (one batched row-scatter, not one update per slot)
@@ -1044,7 +1248,7 @@ class SlotScheduler:
                 self.num_blocks)
             self._state = self._state._replace(tables=tables)
             if self.sketch_on:
-                # a retiring slot's fold frontier resets with it; the tail
+                # a leaving slot's fold frontier resets with it; the tail
                 # sums themselves are zeroed lazily at the NEXT admission
                 self._state = self._state._replace(
                     fold_base=self._state.fold_base.at[
@@ -1056,8 +1260,133 @@ class SlotScheduler:
                 self._slot_rows[s] = 0
                 self._slot_first_lblk[s] = 0
                 self._slot_use_sketch[s] = False
+        for s in freed:
+            self._slot_req[s] = None
+            self._slot_out[s] = []
+            self._slot_spec[s] = 0
+            self._slot_pos[s] = 0
+
+    def _retire(self) -> List[Completion]:
+        """Retire every slot whose token budget is spent.  Purely
+        host-side: a slot is done exactly when its collected output
+        reached ``max_new`` (the chunk clamps emission to the remaining
+        budget, so this coincides with device ``remaining == 0``)."""
+        done: List[Completion] = []
+        freed: List[int] = []
+        for s, req in enumerate(self._slot_req):
+            if req is not None and len(self._slot_out[s]) >= req.max_new:
+                done.append(self._complete(s, "ok"))
+                freed.append(s)
+        self._release_slot_state(freed)
         self.completed.extend(done)
         return done
+
+    def cancel(self, rid: int, status: str = "cancelled"
+               ) -> Optional[Completion]:
+        """Cancel a queued or in-flight request mid-stream: a queued
+        request just leaves the queue; an admitted one is evicted — its
+        table row sentineled, its pool blocks unreffed (target and draft
+        pools share refcounts, so both free together) — and the slot is
+        immediately admittable again.  Returns the Completion (partial
+        ``tokens``, ``status`` as given) or None for an unknown rid.
+        Must run at a pump boundary: never between dispatch() and
+        collect()."""
+        assert self._inflight is None, (
+            "cancel() between dispatch() and collect()")
+        comp = None
+        for i, r in enumerate(self._queue):
+            if r.rid == rid:
+                self._queue.pop(i)
+                comp = self._complete_queued(r, status)
+                break
+        if comp is None:
+            for s, r in enumerate(self._slot_req):
+                if r is not None and r.rid == rid:
+                    comp = self._complete(s, status)
+                    self._release_slot_state([s], deactivate=True)
+                    break
+        if comp is None:
+            return None
+        if status == "expired":
+            self.expirations += 1
+        else:
+            self.cancellations += 1
+        self.completed.append(comp)
+        return comp
+
+    def expire_deadlines(self, now: Optional[float] = None
+                         ) -> List[Completion]:
+        """Expire every request whose deadline has passed: queued ones
+        drop with empty output, in-flight ones retire with whatever
+        tokens they have (status "expired" either way)."""
+        if now is None:
+            now = time.monotonic()
+        late = [r.rid for r in self._queue
+                if r.deadline is not None and r.deadline <= now]
+        late += [r.rid for r in self._slot_req
+                 if r is not None and r.deadline is not None
+                 and r.deadline <= now]
+        return [c for c in (self.cancel(rid, "expired") for rid in late)
+                if c is not None]
+
+    def preempt(self, slot: int) -> Request:
+        """Evict a RUNNING slot and requeue its request as a
+        continuation: prompt extended by the tokens already emitted,
+        budget reduced by the same count, reinserted at the head of its
+        priority band.  The request later completes "ok" with its
+        original prompt_len and its full output — preemption changes
+        when it runs, not what it returns.  Sampled slots carry their
+        advanced per-slot PRNG key so the continuation keeps drawing
+        from the same stream.  Must run at a pump boundary."""
+        assert self._inflight is None, (
+            "preempt() between dispatch() and collect()")
+        req = self._slot_req[slot]
+        assert req is not None, f"preempt of empty slot {slot}"
+        out = list(self._slot_out[slot])
+        plen0, prior, hit0 = self._preempted.get(
+            req.rid, (len(req.tokens), [], False))
+        self._preempted[req.rid] = (plen0, prior + out,
+                                    hit0 or self._slot_hit[slot])
+        temp = (self.temperature if req.temperature is None
+                else float(req.temperature))
+        cont = dataclasses.replace(
+            req,
+            tokens=np.concatenate([np.asarray(req.tokens, np.int32),
+                                   np.asarray(out, np.int32)]),
+            max_new=req.max_new - len(out),
+            key=(jnp.asarray(self._state.keys[slot]) if temp > 0
+                 else req.key))
+        self._release_slot_state([slot], deactivate=True)
+        self.preemptions += 1
+        # the continuation must not re-feed the count-min tracker (its
+        # prefix was counted at first admission): memo None keeps hit
+        # lookups stateless and suppresses re-admission of the extended
+        # prompt, while a cached prefix the original admission donated
+        # still gives the continuation a zero-copy resume
+        self._admit_memo[req.rid] = None
+        self._enqueue(cont, front=True)
+        return cont
+
+    def _preempt_for(self, req: Request) -> Optional[int]:
+        """Preemption policy for a full engine: evict the lowest-priority
+        running slot STRICTLY below ``req``'s priority (ties broken
+        toward the most recently admitted — least sunk work), returning
+        the freed slot, or None when preemption is off / no slot
+        qualifies (equal-priority traffic is never preempted, so plain
+        FIFO streams keep their old head-of-line behaviour)."""
+        if not self.serve.preemption:
+            return None
+        best = None
+        for s, r in enumerate(self._slot_req):
+            if r is None or r.priority >= req.priority:
+                continue
+            rank = (r.priority, -self._slot_admit_seq[s])
+            if best is None or rank < best[0]:
+                best = (rank, s)
+        if best is None:
+            return None
+        self.preempt(best[1])
+        return best[1]
 
     def _plan_folds(self) -> np.ndarray:
         """Pre-chunk bookkeeping for sketched slots: allocate the blocks
@@ -1066,17 +1395,18 @@ class SlotScheduler:
         slot folds into its tail at the chunk head.  Returns the per-slot
         fold length (rows, block multiples) passed into the compiled
         chunk; the matching host-side frees happen in ``_finish_folds``
-        AFTER the chunk consumed the folded blocks."""
+        AFTER the chunk consumed the folded blocks.  Positions come from
+        the HOST mirror (``_slot_pos``), so planning the next chunk never
+        synchronizes on the previous one."""
         bs = self.block_size
         W = self.kv_window
         fold = np.zeros((self.serve.max_batch,), np.int32)
-        pos = np.asarray(self._state.pos)
         tables = self._state.tables
         dirty = False
         for s, req in enumerate(self._slot_req):
             if req is None or not self._slot_use_sketch[s]:
                 continue
-            p = int(pos[s])
+            p = self._slot_pos[s]
             first = self._slot_first_lblk[s]
             held = self._slot_blocks[s]
             # the chunk writes rows up to p + adv_max (+ rejected
@@ -1124,6 +1454,7 @@ class SlotScheduler:
             dead.extend(self._slot_blocks[s][:n])
             del self._slot_blocks[s][:n]
             self._slot_first_lblk[s] = first + n
+            self.fold_rows_total += n * self.block_size
         if dirty:
             # sentinel the rows BEFORE the unref makes the blocks
             # re-allocatable (nothing allocates between these two lines,
@@ -1138,18 +1469,75 @@ class SlotScheduler:
         return bool(self._queue) or any(
             r is not None for r in self._slot_req)
 
-    def step(self) -> List[Completion]:
-        """One scheduler round: admit queued requests into free slots
-        (requests the block pool can't serve yet stay queued), run one
-        compiled decode chunk, collect emitted tokens, retire finished
-        requests.  Returns the requests completed this round."""
-        for s in range(self.serve.max_batch):
-            if self._slot_req[s] is None and self._queue:
-                if not self._admit(s, self._queue[0]):
-                    break            # pool pressure: wait for retirements
-                self._queue.pop(0)
+    @property
+    def queue_len(self) -> int:
+        """Requests waiting for admission (the backpressure signal the
+        async front-end bounds against cfg.serve.queue_depth)."""
+        return len(self._queue)
+
+    def progress(self) -> Dict[int, List[int]]:
+        """rid -> tokens emitted so far, for every request still queued
+        or in flight (a preempted request's pre-eviction output counts).
+        The async front-end reads this after each collect() to stream
+        per-token deltas without touching scheduler internals."""
+        out: Dict[int, List[int]] = {}
+        for rid, (_, prior, _) in self._preempted.items():
+            out[rid] = list(prior)
+        for s, r in enumerate(self._slot_req):
+            if r is not None:
+                out[r.rid] = out.get(r.rid, []) + list(self._slot_out[s])
+        for r in self._queue:
+            out.setdefault(r.rid, [])
+        return out
+
+    # ------------------------------------------------------------------
+    # Pump phases — the building blocks of one scheduler round.  The
+    # synchronous ``step()`` composes them back-to-back; the async pump
+    # (serve/frontend.py) interleaves them so host-side admission and
+    # chunked prefill overlap the in-flight device chunk:
+    #
+    #   expire_deadlines / cancel   (pump boundary only)
+    #   admit_pending               (before OR during the chunk)
+    #   dispatch                    (launch the chunk; returns futures)
+    #       ... more admit_pending: prefill ops enqueue AFTER the chunk
+    #       in device-stream order, and the chunk read pre-admission
+    #       state (an idle slot emits nothing and its sentinel table row
+    #       drops the KV write), so overlapped admission is invisible to
+    #       the in-flight chunk ...
+    #   collect                     (materialize tokens; retire)
+    # ------------------------------------------------------------------
+
+    def admit_pending(self) -> int:
+        """Admission phase: move queued requests into free slots until
+        the queue empties, the engine fills, or the block pool can't
+        serve the head request (it stays queued — FIFO order within a
+        priority band is preserved, so pool pressure never starves the
+        head).  A full engine may PREEMPT a strictly lower-priority slot
+        for a high-priority head (``cfg.serve.preemption``).  Safe to
+        call while a chunk is in flight.  Returns the admission count."""
+        admitted = 0
+        while self._queue:
+            head = self._queue[0]
+            slot = next((s for s, r in enumerate(self._slot_req)
+                         if r is None), None)
+            if slot is None:
+                slot = self._preempt_for(head) \
+                    if self._inflight is None else None
+            if slot is None or not self._admit(slot, head):
+                break                # full / pool pressure: wait
+            self._queue.pop(0)
+            admitted += 1
+        return admitted
+
+    def dispatch(self) -> bool:
+        """Decode phase, launch half: run one compiled decode chunk
+        ASYNCHRONOUSLY — jax dispatch returns futures, so the host keeps
+        working (admission, prefill, stream delivery) while the device
+        crunches; ``collect()`` materializes the result.  Returns False
+        when no slot is active (nothing to run)."""
+        assert self._inflight is None, "one decode chunk may be in flight"
         if not any(r is not None for r in self._slot_req):
-            return []
+            return False
         fold_host = None
         if self.sketch_on:
             fold_host = self._plan_folds()
@@ -1168,8 +1556,25 @@ class SlotScheduler:
             self._state, toks, emits = self._chunk_fn(self.params,
                                                       self._state)
         if fold_host is not None:
+            # the fold's host half runs at dispatch time: the table
+            # sentinels enqueue AFTER the chunk in device-stream order,
+            # and any re-allocation's prefill writes enqueue later still
             self._finish_folds(fold_host)
         self.decode_steps += self.serve.decode_chunk
+        self._inflight = (toks, emits)
+        return True
+
+    def collect(self) -> List[Completion]:
+        """Decode phase, collect half: materialize the in-flight chunk's
+        tokens (this is the ONE host-device sync point of a round),
+        account them to their slots, advance the host position mirrors,
+        and retire every request whose budget is spent.  Slots admitted
+        while the chunk was in flight emitted nothing (their ``remaining``
+        was 0 when the chunk launched), so overlap never misattributes
+        tokens."""
+        assert self._inflight is not None, "collect() without dispatch()"
+        toks, emits = self._inflight
+        self._inflight = None
         toks = np.asarray(toks)
         emits = np.asarray(emits)
         if toks.ndim == 2:               # plain chunk: one token per step
@@ -1184,6 +1589,7 @@ class SlotScheduler:
                     continue
                 self._slot_out[s].extend(
                     int(x) for x in toks[t, s][emits[t, s]])
+                self._slot_pos[s] += e
                 if self._slot_spec[s] > 0:
                     # one verify round: slot proposed spec_k tokens and
                     # e - 1 of them survived verification
@@ -1192,16 +1598,31 @@ class SlotScheduler:
                     self.spec_accepted += e - 1
         return self._retire()
 
-    def run(self, requests: Optional[List[Request]] = None
-            ) -> List[Completion]:
-        """Drain: submit ``requests`` (if given) and step until every
-        queued and in-flight request has completed."""
-        for r in requests or []:
-            self.submit(r)
+    def step(self) -> List[Completion]:
+        """One SYNCHRONOUS scheduler round — the closed-batch
+        composition of the pump phases: expire deadlines, admit into
+        free slots, run one compiled decode chunk and immediately
+        collect it.  Returns the requests completed this round."""
+        self.expire_deadlines()
+        self.admit_pending()
+        if not self.dispatch():
+            return []
+        return self.collect()
+
+    def drain(self) -> List[Completion]:
+        """Step until every queued and in-flight request completed."""
         done: List[Completion] = []
         while self.pending:
             done.extend(self.step())
         return done
+
+    def run(self, requests: Optional[List[Request]] = None
+            ) -> List[Completion]:
+        """Closed-batch convenience: submit ``requests`` (if given) and
+        drain."""
+        for r in requests or []:
+            self.submit(r)
+        return self.drain()
 
     # ------------------------------------------------------------------
     # Introspection
@@ -1303,3 +1724,40 @@ class SlotScheduler:
         return sum(len(self._slot_blocks[s]) * bb
                    for s in range(self.serve.max_batch)
                    if self._slot_use_sketch[s])
+
+    def stats(self) -> EngineStats:
+        """The unified observability snapshot (see ``EngineStats``)."""
+        st = EngineStats(
+            queue_depth=len(self._queue),
+            active_slots=sum(r is not None for r in self._slot_req),
+            max_batch=self.serve.max_batch,
+            completed=len(self.completed),
+            cancelled=self.cancellations,
+            expired=self.expirations,
+            preempted=self.preemptions,
+            decode_steps=self.decode_steps,
+            decode_compilations=self.decode_compilations,
+            prefill_compilations=self.prefill_compilations,
+            fold_rows=self.fold_rows_total,
+            kv_sketch_tail_bytes=self.kv_sketch_tail_bytes(),
+            spec_rounds=self.spec_rounds,
+            spec_proposed=self.spec_proposed,
+            spec_accepted=self.spec_accepted,
+        )
+        if self.is_kv:
+            st.pool_blocks = self.num_blocks
+            st.block_size = self.block_size
+            st.blocks_reserved = self.alloc.reserved
+            st.blocks_free = self.alloc.free_count
+            st.blocks_peak = self.alloc.peak_reserved
+            st.kv_reserved_bytes = self.kv_reserved_bytes()
+            st.kv_peak_reserved_bytes = self.kv_peak_reserved_bytes()
+            st.kv_peak_used_bytes = self.kv_peak_used_bytes()
+            st.kv_dense_equiv_bytes = self.kv_dense_equiv_bytes()
+            pc = self.prefix_cache.stats
+            st.prefix_lookups = pc.lookups
+            st.prefix_hits = pc.hits
+            st.prefix_admitted = pc.admitted
+            st.prefix_evicted = pc.evicted
+            st.prefix_cached_bytes = pc.bytes
+        return st

@@ -29,6 +29,15 @@ never WHICH tokens — and slots with spec_k == 0 ride the same
 compilation as one-verified-token-per-round participants, so mixed
 spec / non-spec / sampled batches keep the engine's
 one-compilation-per-lifetime contract.
+
+Pump-step boundaries: each round clamps its emission to the slot's
+remaining budget (``e = min(n + 1, remaining)``), so the committed
+position and token count advance in lockstep — the scheduler's HOST
+mirrors stay exact without reading device state, which is what lets the
+async pump (serve/frontend.py) cancel, preempt or retire a speculating
+slot at any chunk boundary: rejected overhang rows sit above the
+committed position and are never observable by a successor occupant
+(its table row is sentineled before the blocks free).
 """
 from __future__ import annotations
 

@@ -20,10 +20,9 @@ from __future__ import annotations
 
 import functools
 
-import numpy as np
-
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 _M1 = 0x85EBCA6B
 _M2 = 0xC2B2AE35

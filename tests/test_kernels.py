@@ -14,10 +14,10 @@ import pytest
 
 from repro.kernels import ref
 from repro.kernels.count_sketch import count_sketch
-from repro.kernels.paged_attention import paged_attention
-from repro.kernels.unsketch import unsketch
 from repro.kernels.ops import (count_sketch_op, paged_attention_op,
                                unsketch_op)
+from repro.kernels.paged_attention import paged_attention
+from repro.kernels.unsketch import unsketch
 
 SHAPES = [(1, 64, 32), (4, 1000, 256), (2, 300, 64), (8, 4096, 512),
           (1, 50, 300), (3, 128, 128)]

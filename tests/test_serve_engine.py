@@ -623,7 +623,7 @@ def test_rtpm_nan_safe_selection():
 
 
 def _allocator_program(num_blocks: int, seed: int, steps: int) -> None:
-    """Drive one random alloc/ref/unref/fork program against a
+    """Drive one random alloc/ref/unref/fork/cancel program against a
     BlockAllocator and assert its books after every operation:
 
       * conservation: reserved + free == num_blocks, always
@@ -632,12 +632,21 @@ def _allocator_program(num_blocks: int, seed: int, steps: int) -> None:
       * no double-frees: the free list never holds duplicates
       * fork: the forked-from block keeps its other holders, the fork
         target is exclusively held
+      * cancel: a mid-flight cancellation releases a "request's" whole
+        block group in one bulk unref (the async front-end's cancel /
+        expire / preempt path) — the books must balance immediately,
+        with every other group's references untouched
+
+    Every reference is tagged with the group ("request") that created
+    it, so a cancel is a realistic storm primitive: groups die in random
+    order, interleaved with allocs, shares and forks from survivors.
     """
     from repro.serve.scheduler import BlockAllocator
 
     rng = np.random.RandomState(seed)
     alloc = BlockAllocator(num_blocks, block_bytes=64)
-    held: list = []            # one entry per reference we hold
+    held: list = []            # (block, gid): one entry per reference
+    next_gid = 0
 
     def check():
         assert alloc.reserved + alloc.free_count == alloc.num_blocks
@@ -647,35 +656,36 @@ def _allocator_program(num_blocks: int, seed: int, steps: int) -> None:
             rc = int(alloc.rc[b])
             assert rc >= 0
             assert (rc == 0) == (b in free), (b, rc)
-        assert sorted(b for b in held) == sorted(
+        assert sorted(b for b, _ in held) == sorted(
             b for b in range(alloc.num_blocks)
             for _ in range(int(alloc.rc[b]))), "leaked or lost reference"
 
     for _ in range(steps):
-        op = rng.randint(4)
-        if op == 0:                                    # alloc
+        op = rng.randint(5)
+        if op == 0:                                    # alloc (new group)
             n = int(rng.randint(1, 4))
             ids = alloc.alloc(n)
             if ids is None:
                 assert n > alloc.free_count
             else:
-                held.extend(ids)
-        elif op == 1 and held:                         # ref
-            b = held[rng.randint(len(held))]
+                held.extend((b, next_gid) for b in ids)
+                next_gid += 1
+        elif op == 1 and held:                         # ref (share)
+            b, g = held[rng.randint(len(held))]
             alloc.ref([b])
-            held.append(b)
+            held.append((b, g))
         elif op == 2 and held:                         # unref
-            b = held.pop(rng.randint(len(held)))
+            b, _ = held.pop(rng.randint(len(held)))
             alloc.unref([b])
-        elif op == 3 and held:                         # fork
+        elif op == 3 and held:                         # fork (CoW)
             i = rng.randint(len(held))
-            b = held[i]
+            b, g = held[i]
             rc_before = int(alloc.rc[b])
             nb = alloc.fork(b)
             if nb is None:
                 assert alloc.free_count == 0 and rc_before > 1
             else:
-                held[i] = nb
+                held[i] = (nb, g)
                 assert int(alloc.rc[nb]) >= 1
                 if nb != b:
                     assert rc_before > 1
@@ -683,9 +693,21 @@ def _allocator_program(num_blocks: int, seed: int, steps: int) -> None:
                     assert int(alloc.rc[nb]) == 1
                 else:
                     assert rc_before == 1
+        elif op == 4 and held:                         # cancel one group
+            gids = {g for _, g in held}
+            victim = sorted(gids)[rng.randint(len(gids))]
+            freed = [b for b, g in held if g == victim]
+            held = [(b, g) for b, g in held if g != victim]
+            alloc.unref(freed)                         # bulk, mid-flight
         check()
-    while held:                                        # full teardown
-        alloc.unref([held.pop()])
+    # teardown as a full cancel storm: every surviving group goes down
+    # in one bulk release each, in random order
+    while held:
+        gids = sorted({g for _, g in held})
+        victim = gids[rng.randint(len(gids))]
+        freed = [b for b, g in held if g == victim]
+        held = [(b, g) for b, g in held if g != victim]
+        alloc.unref(freed)
         check()
     assert alloc.reserved == 0 and alloc.free_count == num_blocks
 

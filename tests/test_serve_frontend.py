@@ -1,0 +1,290 @@
+"""Async serving front-end: streamed decode identity vs the batch
+facade, cancellation / deadline expiry freeing pool blocks mid-flight,
+priority preemption resuming bitwise, bounded-queue backpressure, and
+the unified EngineStats snapshot."""
+import asyncio
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import reduced_config
+from repro.models import model as M
+from repro.serve.engine import ServeEngine
+from repro.serve.frontend import AsyncServeEngine
+from repro.serve.scheduler import Request, SlotScheduler
+
+
+@pytest.fixture(scope="module")
+def gemma():
+    cfg = reduced_config("gemma-2b")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _prompts(cfg, rng, n, lo=4, hi=20):
+    return [rng.randint(0, cfg.vocab_size,
+                        (rng.randint(lo, hi),)).astype(np.int32)
+            for _ in range(n)]
+
+
+def _assert_no_leaks(sched):
+    """Every reserved pool block is accounted to the prefix cache once
+    all slots retire — cancellations and expirations included."""
+    if not sched.is_kv:
+        return
+    held = sched.prefix_cache.held_blocks()
+    free = sched.alloc.free_count
+    assert free + held == sched.num_blocks, (free, held, sched.num_blocks)
+
+
+def test_stream_matches_batch_greedy_bitwise(gemma):
+    """A greedy request's streamed tokens are BITWISE what the closed
+    batch path produces for the same prompts — and the streaming side
+    still compiles decode exactly once."""
+    cfg, params = gemma
+    serve = dataclasses.replace(cfg.serve, max_batch=3, max_seq=96,
+                                decode_chunk=4, prefill_bucket=16)
+    rng = np.random.RandomState(0)
+    prompts = _prompts(cfg, rng, 6)
+    ref = {c.rid: c.tokens for c in SlotScheduler(
+        cfg, params, serve=serve).run(
+        [Request(rid=i, tokens=p, max_new=5 + i % 3)
+         for i, p in enumerate(prompts)])}
+
+    front = AsyncServeEngine(cfg, params, serve=serve)
+
+    async def go():
+        handles = [await front.submit(p, max_new=5 + i % 3, rid=i)
+                   for i, p in enumerate(prompts)]
+        streamed = {}
+        for h in handles:
+            toks = [t async for t in h.stream()]
+            streamed[h.rid] = toks
+        return streamed, [h.completion for h in handles]
+
+    streamed, done = asyncio.run(go())
+    for c in done:
+        assert c.status == "ok"
+        np.testing.assert_array_equal(c.tokens, ref[c.rid],
+                                      err_msg=f"rid {c.rid}")
+        # the stream delivered exactly the completion's tokens, in order
+        assert streamed[c.rid] == list(c.tokens)
+    assert front._sched.decode_compilations == 1
+    _assert_no_leaks(front._sched)
+
+
+def test_cancel_midstream_frees_blocks_survivors_unchanged(gemma):
+    """handle.cancel() mid-stream: the victim resolves with status
+    "cancelled" holding only the tokens committed so far, its slot and
+    blocks free (no leak at drain), and a concurrent survivor's output
+    is bitwise what it decodes solo."""
+    cfg, params = gemma
+    serve = dataclasses.replace(cfg.serve, max_batch=2, max_seq=96,
+                                decode_chunk=2, prefill_bucket=16)
+    rng = np.random.RandomState(1)
+    survivor, victim = _prompts(cfg, rng, 2, lo=6, hi=16)
+    ref = SlotScheduler(cfg, params, serve=serve).run(
+        [Request(rid=0, tokens=survivor, max_new=10)])[0]
+
+    front = AsyncServeEngine(cfg, params, serve=serve)
+
+    async def go():
+        hs = await front.submit(survivor, max_new=10, rid=0)
+        hv = await front.submit(victim, max_new=24, rid=1)
+
+        async def consume_victim():
+            n = 0
+            async for _ in hv.stream():
+                n += 1
+                if n >= 3:
+                    hv.cancel()
+            return n
+
+        _, cs, cv = await asyncio.gather(consume_victim(), hs.result(),
+                                         hv.result())
+        return cs, cv
+
+    cs, cv = asyncio.run(go())
+    assert cv.status == "cancelled"
+    assert 0 < len(cv.tokens) < 24, "cancel should land mid-budget"
+    assert cs.status == "ok"
+    np.testing.assert_array_equal(cs.tokens, ref.tokens)
+    assert front._sched.cancellations == 1
+    _assert_no_leaks(front._sched)
+
+
+def test_deadline_expiry_frees_blocks_survivor_unchanged(gemma):
+    """An already-expired deadline resolves the request with status
+    "expired" (partial output) at the next pump boundary; its blocks
+    free, and the surviving request decodes bitwise unperturbed."""
+    cfg, params = gemma
+    serve = dataclasses.replace(cfg.serve, max_batch=2, max_seq=96,
+                                decode_chunk=2, prefill_bucket=16)
+    rng = np.random.RandomState(2)
+    survivor, victim = _prompts(cfg, rng, 2, lo=6, hi=16)
+    ref = SlotScheduler(cfg, params, serve=serve).run(
+        [Request(rid=0, tokens=survivor, max_new=8)])[0]
+
+    front = AsyncServeEngine(cfg, params, serve=serve)
+
+    async def go():
+        hs = await front.submit(survivor, max_new=8, rid=0)
+        hv = await front.submit(victim, max_new=40, rid=1,
+                                deadline_s=1e-6)
+        return await asyncio.gather(hs.result(), hv.result())
+
+    cs, cv = asyncio.run(go())
+    assert cv.status == "expired"
+    assert len(cv.tokens) < 40
+    assert cs.status == "ok"
+    np.testing.assert_array_equal(cs.tokens, ref.tokens)
+    assert front._sched.expirations == 1
+    _assert_no_leaks(front._sched)
+
+
+def test_priority_preemption_resumes_bitwise(gemma):
+    """A higher-priority arrival preempts the lowest-priority running
+    slot at a pump boundary; the victim's blocks free for the newcomer
+    and its continuation — requeued at the head of its band — finishes
+    with tokens BITWISE identical to an uncontended run."""
+    cfg, params = gemma
+    serve = dataclasses.replace(cfg.serve, max_batch=1, max_seq=96,
+                                decode_chunk=2, prefill_bucket=16)
+    rng = np.random.RandomState(3)
+    low_p, high_p = _prompts(cfg, rng, 2, lo=6, hi=16)
+    ref = SlotScheduler(cfg, params, serve=serve).run(
+        [Request(rid=0, tokens=low_p, max_new=12)])[0]
+
+    sched = SlotScheduler(cfg, params, serve=serve)
+    sched.submit(Request(rid=0, tokens=low_p, max_new=12, priority=0))
+    done = sched.step()                       # 2 of 12 tokens committed
+    assert not done
+    sched.submit(Request(rid=1, tokens=high_p, max_new=4, priority=5))
+    done = {c.rid: c for c in sched.drain()}
+    assert sched.preemptions == 1
+    assert done[1].status == "ok"
+    # the preempted request resumed and its merged output is bitwise the
+    # uncontended decode — positions, prompt_len and budget all survive
+    # the evict/requeue/re-prefill round trip
+    assert done[0].status == "ok"
+    np.testing.assert_array_equal(done[0].tokens, ref.tokens)
+    assert done[0].prompt_len == len(low_p)
+    _assert_no_leaks(sched)
+
+
+def test_preemption_respects_config_gate(gemma):
+    """serve.preemption=False: a higher-priority arrival waits for a
+    free slot instead of evicting — no preemption, both complete."""
+    cfg, params = gemma
+    serve = dataclasses.replace(cfg.serve, max_batch=1, max_seq=96,
+                                decode_chunk=2, preemption=False)
+    rng = np.random.RandomState(4)
+    a, b = _prompts(cfg, rng, 2, lo=6, hi=12)
+    sched = SlotScheduler(cfg, params, serve=serve)
+    sched.submit(Request(rid=0, tokens=a, max_new=6, priority=0))
+    sched.step()
+    sched.submit(Request(rid=1, tokens=b, max_new=4, priority=5))
+    done = {c.rid: c for c in sched.drain()}
+    assert sched.preemptions == 0
+    assert done[0].status == "ok" and done[1].status == "ok"
+    _assert_no_leaks(sched)
+
+
+def test_backpressure_defers_never_raises(gemma):
+    """submit() past queue_depth parks the submitter on the space event
+    — it defers, it never raises — and every request still completes.
+    The scheduler queue never exceeds the configured bound."""
+    cfg, params = gemma
+    serve = dataclasses.replace(cfg.serve, max_batch=2, max_seq=96,
+                                decode_chunk=2, queue_depth=2)
+    rng = np.random.RandomState(5)
+    prompts = _prompts(cfg, rng, 8, lo=4, hi=10)
+    front = AsyncServeEngine(cfg, params, serve=serve)
+    assert front.queue_depth == 2
+    peak = 0
+
+    async def go():
+        nonlocal peak
+        handles = []
+        for i, p in enumerate(prompts):
+            h = await front.submit(p, max_new=4, rid=i)
+            peak = max(peak, front._sched.queue_len)
+            handles.append(h)
+        return await asyncio.gather(*[h.result() for h in handles])
+
+    done = asyncio.run(go())
+    assert len(done) == 8
+    assert all(c.status == "ok" for c in done)
+    assert peak <= 2, peak
+    assert front._sched.decode_compilations == 1
+    _assert_no_leaks(front._sched)
+
+
+def test_spec_engine_cancel_storm_no_leaks(gemma):
+    """Cancel storm against a SPECULATIVE engine: half the in-flight
+    requests die at random chunk boundaries.  The draft pool mirrors the
+    target pool's block ids, so the conservation assert covers both —
+    free + cache-held == pool after drain, refcount books clean, and
+    the survivors' greedy output stays bitwise identical to an
+    uncontended speculative run."""
+    cfg, params = gemma
+    serve = dataclasses.replace(cfg.serve, max_batch=3, max_seq=96,
+                                decode_chunk=2, prefill_bucket=16,
+                                spec_k=2, draft_depth=1,
+                                admit_threshold=1 << 30)
+    rng = np.random.RandomState(6)
+    prompts = _prompts(cfg, rng, 6, lo=6, hi=16)
+    survivors = [0, 2, 4]
+    ref = {c.rid: c.tokens for c in SlotScheduler(
+        cfg, params, serve=serve).run(
+        [Request(rid=i, tokens=prompts[i], max_new=8)
+         for i in survivors])}
+
+    sched = SlotScheduler(cfg, params, serve=serve)
+    for i, p in enumerate(prompts):
+        sched.submit(Request(rid=i, tokens=p, max_new=8))
+    storm = [1, 3, 5]
+    done = []
+    while sched.pending:
+        done.extend(sched.step())
+        if storm:                              # one kill per boundary
+            c = sched.cancel(storm.pop())
+            if c is not None:
+                done.append(c)
+    by_rid = {c.rid: c for c in done}
+    assert len(by_rid) == 6
+    assert all(by_rid[r].status == "cancelled" for r in (1, 3, 5))
+    for r in survivors:
+        assert by_rid[r].status == "ok"
+        np.testing.assert_array_equal(by_rid[r].tokens, ref[r],
+                                      err_msg=f"rid {r}")
+    assert sched.decode_compilations == 1
+    # refcount books: reserved blocks all have holders, free ones none
+    free = set(sched.alloc._free)
+    for b in range(sched.num_blocks):
+        assert (int(sched.alloc.rc[b]) == 0) == (b in free)
+    _assert_no_leaks(sched)
+
+
+def test_engine_stats_unified_snapshot(gemma):
+    """ServeEngine.stats(): one merged EngineStats across schedulers —
+    completions / cache counters / pool occupancy in a single flat
+    snapshot, and format() renders without error."""
+    cfg, params = gemma
+    eng = ServeEngine(cfg, params)
+    prompts = np.asarray(
+        np.random.RandomState(7).randint(0, cfg.vocab_size, (2, 8)),
+        np.int32)
+    out = eng.generate(prompts, max_new=4)
+    assert out.tokens.shape == (2, 4)
+    st = eng.stats()
+    assert st.completed == 2
+    assert st.decode_compilations == 1
+    assert st.cancelled == 0 and st.expired == 0
+    text = st.format()
+    assert "queue=" in text and "paged KV" in text
+    # a second batch accumulates into the same snapshot
+    eng.generate(prompts, max_new=4)
+    assert eng.stats().completed == 4

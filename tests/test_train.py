@@ -1,6 +1,8 @@
 """Training substrate: optimizer behaviour, FCS gradient compression with
 error feedback, data determinism, checkpoint roundtrips."""
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -15,8 +17,6 @@ from repro.train.grad_compress import (LeafCodec, _leaf_codecs,
                                        compress_roundtrip, sketch_leaf)
 from repro.train.loop import train
 from repro.train.optimizer import adamw_init, adamw_update
-
-import dataclasses
 
 
 def test_adamw_minimizes_quadratic():
