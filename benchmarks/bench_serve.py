@@ -403,6 +403,69 @@ def _async_stream(arch: str, n_requests: int, n_prefixes: int,
          f"decode_compiles={st.decode_compilations}")
 
 
+def _obs_overhead(arch: str, n_requests: int, n_prefixes: int,
+                  prefix_len: int, max_tail: int, max_new: int,
+                  max_batch: int, max_seq: int,
+                  metrics_jsonl=None) -> None:
+    """Observability overhead: the same closed-batch greedy stream
+    through a bare engine and one carrying a full ``ServeObserver``
+    (tracing at sample_rate=1, metrics flushed EVERY decode round —
+    the worst case; the probe needs kv sketching and is off here).
+
+    The primary ``us_per_call`` is the tracing-OFF run, so the spread
+    gate in compare.py keeps guarding baseline serve throughput; the
+    tracing-on ratio is reported (and bounded) separately.  Asserts the
+    two runs' tokens are bitwise identical and each compiled the decode
+    chunk exactly once — observability must never touch the compiled
+    path."""
+    from repro.obs import ServeObserver, Tracer
+
+    cfg = reduced_config(arch)
+    k_params, _ = jax.random.split(jax.random.PRNGKey(0))
+    params = M.init_params(k_params, cfg)
+
+    def run_once(obs):
+        serve = dataclasses.replace(
+            cfg.serve, max_batch=max_batch, max_seq=max_seq,
+            prefix_block=prefix_len, admit_threshold=2)
+        sched = SlotScheduler(cfg, params, serve=serve, obs=obs)
+        rng = np.random.RandomState(0)
+        # compile warmup with the observer already attached: hooks run
+        # host-side only, so the compiled chunk is identical either way
+        sched.run(make_request_stream(cfg, rng, max_batch, n_prefixes,
+                                      prefix_len, max_tail, max_new,
+                                      rid0=10_000))
+        reqs = make_request_stream(cfg, rng, n_requests, n_prefixes,
+                                   prefix_len, max_tail, max_new)
+        t0 = time.time()
+        done = sched.run(reqs)
+        dt = time.time() - t0
+        assert sched.decode_compilations == 1, sched.decode_compilations
+        return dt, sum(len(c.tokens) for c in done), \
+            {c.rid: np.asarray(c.tokens) for c in done}
+
+    t_off, toks_off, out_off = run_once(None)
+    obs = ServeObserver(tracer=Tracer(sample_rate=1.0),
+                        metrics_path=metrics_jsonl,
+                        metrics_interval=0.0)
+    t_on, toks_on, out_on = run_once(obs)
+    obs.close()
+    for rid, ref in out_off.items():
+        np.testing.assert_array_equal(
+            out_on[rid], ref,
+            err_msg=f"observer changed greedy tokens (rid {rid})")
+    ratio = t_on / t_off
+    # host-side hooks on a pump that blocks on a device chunk per round:
+    # a 1.5x wall-clock ceiling is generous — regressions that sneak a
+    # sync or per-token work into the hooks blow well past it
+    assert ratio <= 1.5, (t_on, t_off)
+    assert len(obs.tracer) > 0 and len(obs.windows) > 0
+    emit(f"serve/obs_overhead/{arch}", t_off / max(toks_off, 1),
+         f"family={cfg.family};tok_s={toks_off/t_off:.1f};"
+         f"tok_s_on={toks_on/t_on:.1f};obs_overhead={ratio:.3f};"
+         f"trace_events={len(obs.tracer)};windows={len(obs.windows)}")
+
+
 def _hit_latency(arch: str, prefix_len: int, suffix_len: int, max_new: int,
                  max_seq: int) -> None:
     """Cached-prefix request latency (suffix chunk-prefilled, spanning
@@ -449,7 +512,8 @@ def run(archs=("gemma-2b", "xlstm-1.3b", "zamba2-2.7b"),
         max_tail: int = 12, max_new: int = 8, max_batch: int = 4,
         max_seq: int = 128, kv_max_seq: int = 512,
         sampled_frac: float = 0.25, hit_suffix: int = 48,
-        spec_k: int = 4, spec_max_new: int = 48) -> None:
+        spec_k: int = 4, spec_max_new: int = 48,
+        metrics_jsonl=None) -> None:
     for arch in archs:
         # attention families get the big-max_seq geometry: the paged pool
         # makes sequence capacity nearly free (blocks are reserved per
@@ -465,6 +529,12 @@ def run(archs=("gemma-2b", "xlstm-1.3b", "zamba2-2.7b"),
                   prefix_len=prefix_len, max_tail=max_tail, max_new=24,
                   max_batch=max_batch, max_seq=kv_max_seq, rate=50.0,
                   cancel_frac=0.5)
+    # observability overhead: identical greedy stream, observer on/off;
+    # tracing-off tok/s is the gated number
+    _obs_overhead("gemma-2b", n_requests=min(n_requests, 12),
+                  n_prefixes=n_prefixes, prefix_len=prefix_len,
+                  max_tail=max_tail, max_new=max_new, max_batch=max_batch,
+                  max_seq=kv_max_seq, metrics_jsonl=metrics_jsonl)
     # chunked-prefill hit latency: suffix spans multiple prefill buckets
     _hit_latency("gemma-2b", prefix_len=prefix_len, suffix_len=hit_suffix,
                  max_new=max_new, max_seq=max_seq)

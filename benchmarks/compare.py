@@ -47,7 +47,8 @@ TRACKED = ("tok_s", "hit_rate", "kv_peak_reserved_bytes",
            "sketch_bytes_ratio", "spec_speedup", "accept_rate",
            "mean_accepted_run", "kv_tail_bytes", "tail_cosine",
            "paged_kernel_speedup", "kernel_tok_s", "verify_us_kernel",
-           "ttft_p50_ms", "ttft_p99_ms", "itl_p50_ms", "itl_p99_ms")
+           "ttft_p50_ms", "ttft_p99_ms", "itl_p50_ms", "itl_p99_ms",
+           "obs_overhead", "tok_s_on")
 
 # how many multiples of a row's measured run-to-run spread the per-row
 # gate allows before calling a regression (see --spread-files)
@@ -101,6 +102,14 @@ def compare(base: dict, cur: dict, max_regress: float = 0.0,
     lifted only for rows whose own measured noise exceeds it."""
     names = list(cur) + [n for n in base if n not in cur]
     failures = []
+
+    def _ident(rows: dict) -> str:
+        # ts/sha stamped by benchmarks.run --json (same on every row);
+        # older artifacts predate the stamp — show a placeholder
+        r = next(iter(rows.values()), {})
+        return f"{r.get('sha', '?')} @ {r.get('ts', '?')}"
+
+    print(f"# baseline {_ident(base)}  ->  current {_ident(cur)}")
     print(f"{'name':44s} {'us/call':>12s} {'Δ':>8s}  tracked metrics")
     for n in names:
         b, c = base.get(n), cur.get(n)

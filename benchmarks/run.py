@@ -3,15 +3,22 @@
   PYTHONPATH=src python -m benchmarks.run [--fast] [--only a,b] [--json f]
 
 ``--json`` additionally writes the collected rows as a JSON list of
-{name, us_per_call, derived} objects — the CI bench-smoke job uploads it
-as a per-PR artifact so the perf trajectory is recorded.  ``--only``
+{name, us_per_call, derived, metrics, ts, sha} objects — the CI
+bench-smoke job uploads it as a per-PR artifact so the perf trajectory
+is recorded; ``ts`` (UTC wall clock) and ``sha`` (git commit) make
+artifacts self-identifying when compared out of band.  ``--only``
 restricts the pass to a comma-separated subset of benchmark modules
-(e.g. ``--only serve,opt_state``).
+(e.g. ``--only serve,opt_state``).  ``--metrics-jsonl`` hands the serve
+bench a path for its observability-overhead row to stream windowed
+metrics snapshots to (uploaded as a CI artifact next to the bench JSON).
 """
 from __future__ import annotations
 
 import argparse
+import datetime
 import json
+import os
+import subprocess
 import sys
 import time
 
@@ -32,17 +39,37 @@ def _parse_derived(derived: str) -> dict:
     return metrics
 
 
+def _git_sha() -> str:
+    """Commit identity for the artifact: CI env first (works in shallow
+    or detached checkouts), then git, then a placeholder."""
+    sha = os.environ.get("GITHUB_SHA", "")
+    if sha:
+        return sha[:12]
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short=12", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
 def _write_json(path: str) -> None:
     from benchmarks.common import ROWS
+    ts = datetime.datetime.now(datetime.timezone.utc).isoformat(
+        timespec="seconds")
+    sha = _git_sha()
     rows = []
     for r in ROWS:
         name, us, derived = r.split(",", 2)
         rows.append({"name": name, "us_per_call": float(us),
                      "derived": derived,
-                     "metrics": _parse_derived(derived)})
+                     "metrics": _parse_derived(derived),
+                     "ts": ts, "sha": sha})
     with open(path, "w") as f:
         json.dump(rows, f, indent=1)
-    print(f"# wrote {len(rows)} rows to {path}", file=sys.stderr)
+    print(f"# wrote {len(rows)} rows to {path} (sha={sha} ts={ts})",
+          file=sys.stderr)
 
 
 def main() -> None:
@@ -55,6 +82,10 @@ def main() -> None:
                          "opt_state,serve)")
     ap.add_argument("--json", default="",
                     help="also write rows as JSON to this path")
+    ap.add_argument("--metrics-jsonl", default="",
+                    help="serve bench: stream windowed observability "
+                         "metrics (JSONL) from the obs_overhead row to "
+                         "this path")
     args, _ = ap.parse_known_args()
 
     known = {"rtpm", "als", "trl", "kron", "contract", "grad_compress",
@@ -94,7 +125,8 @@ def main() -> None:
             # prefill_hit row really times the multi-bucket chunked path
             bench_serve.run(archs=("gemma-2b", "xlstm-1.3b"),
                             n_requests=8, max_new=4, max_batch=2,
-                            hit_suffix=40, spec_max_new=32)
+                            hit_suffix=40, spec_max_new=32,
+                            metrics_jsonl=args.metrics_jsonl or None)
     else:
         if want("rtpm"):
             bench_rtpm.run()
@@ -111,7 +143,7 @@ def main() -> None:
         if want("opt_state"):
             bench_opt_state.run()
         if want("serve"):
-            bench_serve.run()
+            bench_serve.run(metrics_jsonl=args.metrics_jsonl or None)
 
     if args.json:
         _write_json(args.json)

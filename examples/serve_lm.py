@@ -24,6 +24,13 @@ returns a StreamHandle, tokens arrive per decode chunk through
 ``async for tok in handle.stream()``, and an impatient client's
 ``handle.cancel()`` retires the slot and frees its blocks mid-flight —
 the survivors decode on, bitwise unperturbed.
+Part 6 adds OBSERVABILITY (``repro.obs``): the same streamed +
+cancelled pair runs with a ``ServeObserver`` attached — the request
+lifecycle (queued -> admitted -> token deliveries -> done/cancelled)
+and the pump's dispatch/collect phases land in a Chrome trace JSON you
+can open in Perfetto, while windowed metrics (TTFT, queue wait,
+per-status completions) accumulate in the registry.  All host-side:
+the served tokens are bitwise the Part 5 tokens.
 """
 import argparse
 import asyncio
@@ -35,6 +42,7 @@ import numpy as np
 
 from repro.configs.registry import ARCH_IDS, reduced_config
 from repro.models import model as M
+from repro.obs import ServeObserver, Tracer, write_trace
 from repro.serve.engine import ServeEngine
 from repro.serve.frontend import AsyncServeEngine
 from repro.serve.scheduler import KV_FAMILIES, Request, SlotScheduler
@@ -173,6 +181,43 @@ def main():
     print(f"[async] engine stats: completed={st.completed} "
           f"cancelled={st.cancelled}, pool free "
           f"{st.blocks_free}/{st.pool_blocks} blocks")
+
+    # -- Part 6: tracing a streamed + cancelled request --------------------
+    # attach a ServeObserver (tracer + metrics registry) and replay the
+    # Part 5 shape: one patient stream, one mid-stream hangup.  Every
+    # hook is host-side bookkeeping — tokens match Part 5 bitwise.
+    obs = ServeObserver(tracer=Tracer(sample_rate=1.0),
+                        metrics_interval=0.0)
+    sched6 = SlotScheduler(cfg, params, serve=serve, obs=obs)
+    front6 = AsyncServeEngine(scheduler=sched6)
+
+    async def stream_traced():
+        patient = await front6.submit(p1, max_new=10)
+        impatient = await front6.submit(p2, max_new=24)
+
+        async def consume(handle, hang_up_after=None):
+            got = []
+            async for tok in handle.stream():
+                got.append(tok)
+                if hang_up_after and len(got) >= hang_up_after:
+                    handle.cancel()
+            return got
+
+        return await asyncio.gather(consume(patient),
+                                    consume(impatient, 4))
+
+    full6, partial6 = asyncio.run(stream_traced())
+    assert full6 == full and partial6 == partial, "observer changed tokens"
+    write_trace(obs.tracer, "serve_trace.json")
+    w = obs.flush(stats=sched6.stats())
+    reg = obs.registry
+    print(f"[obs] trace: {len(obs.tracer)} events -> serve_trace.json "
+          f"(open in https://ui.perfetto.dev)")
+    print(f"[obs] totals: ok={w['counters']['serve.completions.ok']['total']:.0f} "
+          f"cancelled={w['counters']['serve.completions.cancelled']['total']:.0f} "
+          f"over {len(obs.windows)} windows; "
+          f"ttft_p50={reg.hist('serve.ttft_s').quantile(0.5)*1e3:.0f}ms "
+          f"queue_wait_p90={reg.hist('serve.queue_wait_s').quantile(0.9)*1e3:.1f}ms")
 
 
 if __name__ == "__main__":

@@ -24,8 +24,13 @@ and mean accepted-run length are reported).  ``--kv-sketch-window N``
 turns on sketched long-context KV: each slot keeps the most recent N
 rows exact and folds older blocks into per-slot FCS tail tables
 (``--long-context S`` appends one S-token demo prompt; the exact-window
-vs sketched-tail byte split is printed).  Runs on the reduced config by
-default; pass ``--full`` for the full architecture.
+vs sketched-tail byte split is printed).  ``--trace-out trace.json``
+records the full request lifecycle + pump phases as Chrome trace-event
+JSON (load in Perfetto), ``--metrics-jsonl metrics.jsonl`` streams
+windowed metrics snapshots, and ``--fidelity-every N`` samples the
+sketch-fidelity probe for folded slots every N decode rounds.  Runs on
+the reduced config by default; pass ``--full`` for the full
+architecture.
 """
 from __future__ import annotations
 
@@ -39,6 +44,7 @@ import numpy as np
 
 from repro.configs.registry import ARCH_IDS, get_config, reduced_config
 from repro.models import model as M
+from repro.obs import ServeObserver, Tracer
 from repro.serve.frontend import AsyncServeEngine
 from repro.serve.scheduler import KV_FAMILIES, Request, SlotScheduler
 
@@ -71,13 +77,17 @@ def make_request_stream(cfg, rng: np.random.RandomState, n_requests: int,
 
 async def stream_poisson(front: AsyncServeEngine, reqs, rate: float,
                          cancel_frac: float, deadline_s: float,
-                         rng: np.random.RandomState):
+                         rng: np.random.RandomState,
+                         priority_frac: float = 0.0):
     """Open-loop Poisson driver: submit ``reqs`` with exponential
     inter-arrival gaps (mean 1/rate s), stream every response, and hang
     up on a ``cancel_frac`` fraction of clients midway through their
-    budget.  Returns (completions, first_token_latencies) — arrival
-    pacing is wall-clock real, so TTFT numbers here include genuine
-    queueing delay, not just compute."""
+    budget.  A ``priority_frac`` fraction of requests submits at
+    priority 1 — under slot pressure those preempt running priority-0
+    requests, so traces show preempt + re-admission continuations.
+    Returns (completions, first_token_latencies) — arrival pacing is
+    wall-clock real, so TTFT numbers here include genuine queueing
+    delay, not just compute."""
     results = []
     ttfts = []
 
@@ -96,6 +106,7 @@ async def stream_poisson(front: AsyncServeEngine, reqs, rate: float,
         h = await front.submit(
             r.tokens, max_new=r.max_new, temperature=r.temperature,
             top_k=r.top_k, seed=r.seed,
+            priority=(1 if rng.rand() < priority_frac else 0),
             deadline_s=(deadline_s if deadline_s > 0 else 0),
             rid=r.rid)
         cancel_after = (max(1, r.max_new // 2)
@@ -161,6 +172,27 @@ def main():
                     help="per-request SLO deadline in seconds; expired "
                          "requests surface partial output (open-loop "
                          "only; 0 = none)")
+    ap.add_argument("--priority-frac", type=float, default=0.0,
+                    help="fraction of open-loop requests submitted at "
+                         "priority 1 (may preempt running priority-0 "
+                         "requests under slot pressure)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome trace-event JSON (load in "
+                         "Perfetto / chrome://tracing) of the request "
+                         "lifecycle and pump phases to this path")
+    ap.add_argument("--trace-sample", type=float, default=1.0,
+                    help="fraction of requests traced (deterministic "
+                         "by rid); engine-level events always record")
+    ap.add_argument("--metrics-jsonl", default=None,
+                    help="append windowed metrics snapshots (counter "
+                         "deltas/rates, latency quantiles, gauges) as "
+                         "JSON lines to this path")
+    ap.add_argument("--metrics-interval", type=float, default=0.5,
+                    help="seconds between metrics windows")
+    ap.add_argument("--fidelity-every", type=int, default=2,
+                    help="sketch-fidelity probe cadence in decode "
+                         "rounds (0 = off; needs --kv-sketch-window; "
+                         "runs only at chunk boundaries)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--full", action="store_true",
                     help="run the full architecture (default: reduced)")
@@ -185,6 +217,16 @@ def main():
         print(f"note: --spec-k needs an attention family; {cfg.family!r} "
               f"decodes plainly")
     sched = SlotScheduler(cfg, params, serve=serve)
+    obs = None
+    if args.trace_out or args.metrics_jsonl:
+        obs = ServeObserver(
+            tracer=(Tracer(sample_rate=args.trace_sample)
+                    if args.trace_out else None),
+            metrics_path=args.metrics_jsonl,
+            metrics_interval=args.metrics_interval,
+            fidelity_every=(args.fidelity_every
+                            if args.kv_sketch_window > 0 else 0))
+        sched.set_observer(obs)
     reqs = make_request_stream(cfg, np.random.RandomState(args.seed + 1),
                                args.requests, args.prefixes,
                                args.prefix_len, args.max_tail, args.max_new,
@@ -205,7 +247,8 @@ def main():
         front = AsyncServeEngine(scheduler=sched)
         done, ttfts = asyncio.run(stream_poisson(
             front, reqs, args.arrival_rate, args.cancel_frac,
-            args.deadline_s, np.random.RandomState(args.seed + 3)))
+            args.deadline_s, np.random.RandomState(args.seed + 3),
+            priority_frac=args.priority_frac))
     else:
         done = sched.run(reqs)
         ttfts = []
@@ -238,6 +281,15 @@ def main():
     print(sched.stats().format())
     print("first completions:",
           [(c.rid, c.status, c.tokens[:6].tolist()) for c in done[:2]])
+    if obs is not None:
+        obs.close(stats=sched.stats(), trace_path=args.trace_out)
+        if args.trace_out:
+            n_ev = len(obs.tracer)
+            print(f"trace: {n_ev} events -> {args.trace_out} "
+                  f"(open in https://ui.perfetto.dev)")
+        if args.metrics_jsonl:
+            print(f"metrics: {len(obs.windows)} windows -> "
+                  f"{args.metrics_jsonl}")
 
 
 if __name__ == "__main__":

@@ -27,6 +27,12 @@ Layering:
   engine.py       — ServeEngine facade (batched generate API, now a
                     thin wrapper over the async front-end) + the
                     unified EngineStats snapshot
+
+Observability: every layer above holds an optional ``obs`` attribute (a
+``repro.obs.ServeObserver`` or None) and guards each hook site with one
+attribute check — request lifecycle spans, pump-phase timings,
+fold/spec/prefix events and the opt-in sketch-fidelity probe stream out
+with zero added device syncs.  See ``repro.obs``.
 """
 from repro.serve.engine import GenerationResult, ServeEngine
 from repro.serve.frontend import AsyncServeEngine, StreamHandle

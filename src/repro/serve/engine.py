@@ -69,7 +69,7 @@ def _per_request(val: Per, B: int, name: str) -> np.ndarray:
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, max_seq: int = 512,
-                 max_batch: Optional[int] = None):
+                 max_batch: Optional[int] = None, obs=None):
         self.cfg = cfg
         self.params = params
         self.max_seq = max_seq
@@ -78,6 +78,20 @@ class ServeEngine:
         self._frontends = {}         # max_batch -> AsyncServeEngine
         self._draft = None           # derived once, shared by schedulers
         self._rid = 0
+        # one shared repro.obs.ServeObserver (or None) across every
+        # scheduler/front-end this engine creates: merged EngineStats
+        # (kind-tagged: counters sum, gauges disjoint-sum, peaks max)
+        # and the observer's windowed series describe the same engine
+        self._obs = obs
+
+    def set_observer(self, obs) -> None:
+        """Attach an observer to the engine: applies to every live
+        scheduler now and to schedulers created later."""
+        self._obs = obs
+        for s in self._schedulers.values():
+            s.set_observer(obs)
+        for f in self._frontends.values():
+            f.obs = obs
 
     # ------------------------------------------------------------------
 
@@ -104,7 +118,8 @@ class ServeEngine:
                 # on the slot geometry — every scheduler shares it
                 self._draft = make_draft(self.params, self.cfg, serve)
             self._schedulers[kb] = SlotScheduler(
-                self.cfg, self.params, serve=serve, draft=self._draft)
+                self.cfg, self.params, serve=serve, draft=self._draft,
+                obs=self._obs)
         return self._schedulers[kb]
 
     def _frontend(self, batch: int) -> AsyncServeEngine:

@@ -128,7 +128,8 @@ class AsyncServeEngine:
                  serve: Optional[ServeConfig] = None,
                  scheduler: Optional[SlotScheduler] = None,
                  temperature: float = 0.0,
-                 draft: Optional[Draft] = None):
+                 draft: Optional[Draft] = None,
+                 obs: Any = None):
         if scheduler is not None:
             self._sched = scheduler
         else:
@@ -137,6 +138,15 @@ class AsyncServeEngine:
             self._sched = SlotScheduler(cfg, params, serve=serve,
                                         temperature=temperature,
                                         draft=draft)
+        # observability (repro.obs.ServeObserver or None): an explicit
+        # observer attaches to the wrapped scheduler too; otherwise the
+        # front-end adopts whatever the scheduler already carries, so
+        # front-end hooks (TTFT/ITL, pump spans, backpressure) and
+        # scheduler hooks always land in the SAME observer
+        if obs is not None:
+            self._sched.set_observer(obs)
+        self.obs = obs if obs is not None \
+            else getattr(self._sched, "obs", None)
         sv = self._sched.serve
         self.queue_depth = max(1, int(sv.queue_depth))
         self.default_deadline_s = float(sv.default_deadline_s)
@@ -166,9 +176,14 @@ class AsyncServeEngine:
         overrides the engine's counter (the batch facade threads its
         own ids through so key derivation matches)."""
         self._ensure_loop()
+        stalled_at = None
         while self._sched.queue_len >= self.queue_depth:
+            if stalled_at is None:
+                stalled_at = time.perf_counter()
             self._space.clear()
             await self._space.wait()
+        if stalled_at is not None and self.obs is not None:
+            self.obs.backpressure_wait(time.perf_counter() - stalled_at)
         if rid is None:
             rid = self._rid
             self._rid += 1
@@ -222,6 +237,7 @@ class AsyncServeEngine:
 
     async def _pump(self) -> None:
         sched = self._sched
+        obs = self.obs
         while True:
             # pump boundary: no chunk in flight — evictions are safe
             self._apply_cancels()
@@ -229,17 +245,26 @@ class AsyncServeEngine:
                 self._finish(c)
             self._notify_space()
             sched.admit_pending()
+            t0 = time.perf_counter()
             if not sched.dispatch():
                 if not sched.pending:
                     return              # drained; next submit restarts
                 await asyncio.sleep(0)  # transient: let submitters run
                 continue
+            if obs is not None:
+                # host time spent launching the chunk (jax dispatch +
+                # fold planning) — the device work is still in flight
+                obs.pump_span("dispatch", t0, time.perf_counter() - t0)
             # overlap window: the chunk is crunching on-device; yield so
             # fresh submissions land, then run THEIR admission/prefill
             # host work now instead of serializing after collect
             await asyncio.sleep(0)
             sched.admit_pending()
+            t0 = time.perf_counter()
             done = await asyncio.to_thread(sched.collect)
+            if obs is not None:
+                # wall time blocked on the chunk's one device sync
+                obs.pump_span("collect", t0, time.perf_counter() - t0)
             self._deliver_progress()
             for c in done:
                 self._finish(c)
@@ -264,6 +289,8 @@ class AsyncServeEngine:
                 continue
             for t in toks[h._delivered:]:
                 h._queue.put_nowait(int(t))
+            if self.obs is not None:
+                self.obs.tokens_delivered(rid, len(toks) - h._delivered)
             h._delivered = len(toks)
 
     def _finish(self, c: Completion) -> None:
@@ -271,6 +298,8 @@ class AsyncServeEngine:
         if h is None:
             return
         total = [int(t) for t in c.tokens]
+        if self.obs is not None and len(total) > h._delivered:
+            self.obs.tokens_delivered(c.rid, len(total) - h._delivered)
         for t in total[h._delivered:]:
             h._queue.put_nowait(t)
         h._delivered = len(total)

@@ -258,6 +258,43 @@ def dense_tail_stats(q: jax.Array, k: jax.Array, v: jax.Array,
     return m, l, acc
 
 
+# ---------------------------------------------------------------------------
+# Fidelity probe (observability): per-row estimate spread
+# ---------------------------------------------------------------------------
+
+
+def tail_row_spread(tail: Dict[str, jax.Array]) -> jax.Array:
+    """Per-slot relative spread of the Z independent hash-row tail
+    estimates — the live collision-variance proxy behind the ROADMAP's
+    error-adaptive folding ("monitor the tail's median-estimate
+    spread").
+
+    Each hash row z holds an independent count-sketch of the SAME
+    folded rows, so its total energy e_z = sum over (L, C, K, hd) of
+    tail_k^2 + tail_v^2 equals sum_j ||k_j||^2 + ||v_j||^2 exactly when
+    no two folded positions collide in row z, and picks up
+    2 * s_i s_j <x_i, x_j> cross terms when they do.  Rows that agree
+    mean the median-of-rows estimates the engine decodes with are
+    trustworthy; rows that diverge mean collisions are corrupting the
+    tail and the slot is a candidate for a wider exact window or a
+    re-fold.
+
+    tail: {"k","v"} of (L, B, Z, C, K, hd).  Returns (B,) f32:
+    (max_z e - min_z e) / median_z e, 0 for an empty (all-zero) tail.
+
+    Observability contract: this is HOST-OPT-IN telemetry — the
+    scheduler calls it (jitted) only at its configured probe cadence
+    and only at the ``collect()`` boundary where the round's sync
+    already happened; it is never traced into the compiled decode
+    chunk.
+    """
+    e = (jnp.sum(jnp.square(tail["k"]), axis=(0, 3, 4, 5)) +
+         jnp.sum(jnp.square(tail["v"]), axis=(0, 3, 4, 5)))   # (B, Z)
+    med = jnp.median(e, axis=1)
+    spread = jnp.max(e, axis=1) - jnp.min(e, axis=1)
+    return jnp.where(med > 0.0, spread / jnp.maximum(med, 1e-30), 0.0)
+
+
 def fold_rows(k: jax.Array, v: jax.Array, positions: jax.Array,
               coeffs: jax.Array, cols: int):
     """Reference fold of explicit rows (no pool/tables): k/v

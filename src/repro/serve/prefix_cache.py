@@ -85,6 +85,10 @@ class SketchPrefixCache:
     allocator: Any = None
     block_size: int = 0
     stats: PrefixCacheStats = field(default_factory=PrefixCacheStats)
+    # optional repro.obs.ServeObserver: hit / miss / admit / evict /
+    # defer outcomes stream into its windowed ``prefix.*`` counters
+    # (``stats`` above stays the cumulative source of truth)
+    obs: Any = None
 
     def __post_init__(self):
         # whole-block sharing needs admitted prefix lengths (multiples of
@@ -137,8 +141,12 @@ class SketchPrefixCache:
             key, ent = found
             self._entries.move_to_end(key)
             self.stats.hits += 1
+            if self.obs is not None:
+                self.obs.prefix_event("hit")
             return ent.plen, ent.block_ids
         self.stats.misses += 1
+        if self.obs is not None:
+            self.obs.prefix_event("miss")
         return None
 
     # -- write path --------------------------------------------------------
@@ -173,6 +181,8 @@ class SketchPrefixCache:
         counts = self._count(tokens)
         if counts is None:           # sub-block prompt: nothing can ever
             self.stats.rejected += 1  # qualify, but the observation counts
+            if self.obs is not None:
+                self.obs.prefix_event("defer")
             return None
         block = self.cfg.prefix_block
         n_blocks = len(counts)
@@ -187,6 +197,8 @@ class SketchPrefixCache:
                 # otherwise hot-and-cached prompts vanish from the stats
                 break
         self.stats.rejected += 1
+        if self.obs is not None:
+            self.obs.prefix_event("defer")
         return None
 
     def admit(self, tokens: np.ndarray, plen: int,
@@ -221,6 +233,8 @@ class SketchPrefixCache:
         self._entries[key] = _Entry(plen=plen, block_ids=tuple(block_ids))
         self.stats.bytes = len(self._held) * bb
         self.stats.admitted += 1
+        if self.obs is not None:
+            self.obs.prefix_event("admit")
         while self.stats.bytes > self.cfg.prefix_cache_bytes:
             if not self.evict_one():
                 break
@@ -242,6 +256,8 @@ class SketchPrefixCache:
         self.allocator.unref(ent.block_ids)
         self.stats.bytes = len(self._held) * self.allocator.block_bytes
         self.stats.evicted += 1
+        if self.obs is not None:
+            self.obs.prefix_event("evict")
 
     def evict_one(self, idle_only: bool = False) -> bool:
         """Evict one entry in LRU order, preferring entries whose blocks

@@ -126,6 +126,8 @@ from repro.models.draft import Draft, make_draft
 from repro.serve import kv_sketch as kvs
 from repro.serve.prefix_cache import SketchPrefixCache
 from repro.serve.speculative import build_spec_chunk
+from repro.serve.speculative import round_accounting as \
+    spec_round_accounting
 
 KV_FAMILIES = ("dense", "moe", "audio", "vlm")
 RECURRENT_FAMILIES = ("ssm", "hybrid")
@@ -175,43 +177,76 @@ class Completion:
     status: str = "ok"
 
 
+def _stat(kind: str) -> Any:
+    """An ``EngineStats`` field tagged with its merge/metrics KIND:
+
+      "counter"  monotonic event count — merges by SUM, and windowed
+                 metric deltas of it sum back to the cumulative total;
+      "gauge"    instantaneous level over resources the scheduler OWNS
+                 (its queue, its slots, its pool blocks) — schedulers
+                 in one engine own disjoint resources, so a merged
+                 engine-level gauge is the sum of the per-scheduler
+                 gauges (a documented disjoint-sum, not double
+                 counting);
+      "peak"     high-water mark — merges by MAX (summing peaks of
+                 independently-peaking schedulers would report a
+                 moment that never existed);
+      "geometry" a configuration constant — merges by MAX so the
+                 merged snapshot stays printable.
+
+    The same tags drive ``repro.obs.MetricsRegistry.update_from_stats``,
+    so merge semantics and metrics semantics can never drift apart.
+    """
+    return dataclasses.field(default=0, metadata={"kind": kind})
+
+
 @dataclass
 class EngineStats:
     """One flat observability snapshot of a scheduler (or, merged, of a
     whole engine): queue pressure, slot occupancy, pool high-water
     marks, prefix-cache effectiveness, sketch folding and speculative
     acceptance — everything launch/serve.py prints at exit and the
-    async front-end exposes for monitoring.  ``merge`` sums snapshots
-    across schedulers; ratio fields recompute from the summed counts."""
-    queue_depth: int = 0
-    active_slots: int = 0
-    max_batch: int = 0
-    completed: int = 0            # all statuses, incl. the below
-    cancelled: int = 0
-    expired: int = 0
-    preempted: int = 0            # preemption events (requests requeued)
-    decode_steps: int = 0
-    decode_compilations: int = 0
-    prefill_compilations: int = 0
-    pool_blocks: int = 0
-    block_size: int = 0
-    blocks_reserved: int = 0
-    blocks_free: int = 0
-    blocks_peak: int = 0
-    kv_reserved_bytes: int = 0
-    kv_peak_reserved_bytes: int = 0
-    kv_peak_used_bytes: int = 0
-    kv_dense_equiv_bytes: int = 0
-    prefix_lookups: int = 0
-    prefix_hits: int = 0
-    prefix_admitted: int = 0
-    prefix_evicted: int = 0
-    prefix_cached_bytes: int = 0
-    fold_rows: int = 0            # exact-window rows folded into tails
-    kv_sketch_tail_bytes: int = 0
-    spec_rounds: int = 0
-    spec_proposed: int = 0
-    spec_accepted: int = 0
+    async front-end exposes for monitoring.  ``merge`` combines
+    snapshots across schedulers per-field by each field's tagged kind
+    (counters sum, gauges disjoint-sum, peaks max — see ``_stat``);
+    ratio properties recompute from the merged counts.
+
+    ``queue_depth`` never double-counts: each scheduler owns exactly
+    one admission queue, and the async front-end
+    (``AsyncServeEngine``) wraps exactly ONE scheduler — its bounded
+    queue IS that scheduler's queue.  ``ServeEngine`` keeps one
+    scheduler per batch-size family, each with its own (disjoint)
+    queue, so the merged depth is the true number of waiting requests
+    across the engine."""
+    queue_depth: int = _stat("gauge")
+    active_slots: int = _stat("gauge")
+    max_batch: int = _stat("gauge")           # total slots across parts
+    completed: int = _stat("counter")   # all statuses, incl. the below
+    cancelled: int = _stat("counter")
+    expired: int = _stat("counter")
+    preempted: int = _stat("counter")   # preemptions (requests requeued)
+    decode_steps: int = _stat("counter")
+    decode_compilations: int = _stat("counter")
+    prefill_compilations: int = _stat("counter")
+    pool_blocks: int = _stat("gauge")         # pool sizes are disjoint
+    block_size: int = _stat("geometry")
+    blocks_reserved: int = _stat("gauge")
+    blocks_free: int = _stat("gauge")
+    blocks_peak: int = _stat("peak")
+    kv_reserved_bytes: int = _stat("gauge")
+    kv_peak_reserved_bytes: int = _stat("peak")
+    kv_peak_used_bytes: int = _stat("peak")
+    kv_dense_equiv_bytes: int = _stat("gauge")
+    prefix_lookups: int = _stat("counter")
+    prefix_hits: int = _stat("counter")
+    prefix_admitted: int = _stat("counter")
+    prefix_evicted: int = _stat("counter")
+    prefix_cached_bytes: int = _stat("gauge")
+    fold_rows: int = _stat("counter")   # exact rows folded into tails
+    kv_sketch_tail_bytes: int = _stat("gauge")
+    spec_rounds: int = _stat("counter")
+    spec_proposed: int = _stat("counter")
+    spec_accepted: int = _stat("counter")
 
     @property
     def prefix_hit_rate(self) -> float:
@@ -227,15 +262,30 @@ class EngineStats:
                 / max(self.spec_rounds, 1))
 
     @staticmethod
+    def field_kinds() -> Dict[str, str]:
+        """field name -> kind tag ("counter" / "gauge" / "peak" /
+        "geometry"); the single source of truth shared by ``merge`` and
+        the metrics registry's EngineStats bridge."""
+        return {f.name: f.metadata.get("kind", "counter")
+                for f in dataclasses.fields(EngineStats)}
+
+    @staticmethod
     def merge(parts: Sequence["EngineStats"]) -> "EngineStats":
+        """Merge per-scheduler snapshots kind-correctly: counters and
+        gauges sum (gauges measure disjoint resources — see the class
+        docstring), peaks and geometry take the max (each scheduler's
+        high-water mark happened at its own moment; summing them would
+        fabricate a combined peak that never occurred)."""
         out = EngineStats()
         for p in parts:
             for f in dataclasses.fields(EngineStats):
-                if f.name == "block_size":
-                    continue          # a geometry, not a count
-                setattr(out, f.name,
-                        getattr(out, f.name) + getattr(p, f.name))
-            out.block_size = max(out.block_size, p.block_size)
+                kind = f.metadata.get("kind", "counter")
+                if kind in ("peak", "geometry"):
+                    setattr(out, f.name,
+                            max(getattr(out, f.name), getattr(p, f.name)))
+                else:
+                    setattr(out, f.name,
+                            getattr(out, f.name) + getattr(p, f.name))
         return out
 
     def format(self) -> str:
@@ -369,7 +419,8 @@ class SlotScheduler:
     def __init__(self, cfg: ModelConfig, params: Any,
                  serve: Optional[ServeConfig] = None,
                  temperature: float = 0.0,
-                 draft: Optional[Draft] = None):
+                 draft: Optional[Draft] = None,
+                 obs: Any = None):
         if cfg.family not in KV_FAMILIES + RECURRENT_FAMILIES:
             raise ValueError(f"unknown family {cfg.family!r}")
         self.cfg = cfg
@@ -438,6 +489,13 @@ class SlotScheduler:
         self.decode_steps = 0
         self.completed: List[Completion] = []
         self._base_key = jax.random.PRNGKey(sv.seed)
+        # observability (repro.obs.ServeObserver or None).  Every hook
+        # site guards with ``if self.obs is not None`` and passes only
+        # host-side values, so obs off costs one attribute check and
+        # obs on adds no device syncs; ``_round_idx`` paces the opt-in
+        # sketch-fidelity probe (see ``_probe_fidelity``).
+        self.obs: Any = None
+        self._round_idx = 0
 
         if self.is_kv:
             # no max_seq clamp: a block larger than max_seq just means one
@@ -544,6 +602,10 @@ class SlotScheduler:
                                         donate_argnums=(0,))
                 self._zero_tail = jax.jit(self._make_zero_tail(),
                                           donate_argnums=(0,))
+                # opt-in fidelity probe (observability): jitted once,
+                # invoked only at the collect() boundary at the
+                # observer's cadence — never inside the decode chunk
+                self._spread_fn = jax.jit(kvs.tail_row_spread)
             else:
                 self._prefill_chunk = jax.jit(
                     functools.partial(tf.prefill_chunk, cfg=cfg,
@@ -568,6 +630,16 @@ class SlotScheduler:
             # slot "reset" block: zero state inserted before (or instead
             # of, for 1-token prompts) the prefilled state
             self._zero_block = tf.init_cache(cfg, 1, sv.max_seq)
+        if obs is not None:
+            self.set_observer(obs)
+
+    def set_observer(self, obs: Any) -> None:
+        """Attach (or detach, with None) a ``repro.obs.ServeObserver``:
+        the scheduler and its prefix cache report into it from every
+        pump phase.  Safe to call at any pump boundary."""
+        self.obs = obs
+        if self.prefix_cache is not None:
+            self.prefix_cache.obs = obs
 
     # ------------------------------------------------------------------
     # Compiled pieces
@@ -824,6 +896,8 @@ class SlotScheduler:
                 f"pool has {self.num_blocks} (raise "
                 f"cfg.serve.num_kv_blocks)")
         self._enqueue(req, front=False)
+        if self.obs is not None:
+            self.obs.request_queued(req.rid, S, req.priority)
 
     def _enqueue(self, req: Request, front: bool) -> None:
         """Priority-ordered queue insertion (descending priority, stable
@@ -908,8 +982,12 @@ class SlotScheduler:
             seg = prompt[off:off + bucket]
             tok = np.zeros((1, bucket), np.int32)
             tok[0, :len(seg)] = seg
+            t0 = time.perf_counter()
             cache = self._prefill_one(cache, jnp.asarray(tok), table, off,
                                       slot, 0)
+            if self.obs is not None:
+                self.obs.prefill_span(slot, off, len(seg),
+                                      time.perf_counter() - t0)
             off += bucket
         return cache
 
@@ -951,9 +1029,13 @@ class SlotScheduler:
                 slot_ids.extend(ids)
             tok = np.zeros((1, bucket), np.int32)
             tok[0, :len(seg)] = seg
+            t0 = time.perf_counter()
             cache = self._prefill_one(cache, jnp.asarray(tok),
                                       jnp.asarray(row), off, slot,
                                       fold_base)
+            if self.obs is not None:
+                self.obs.prefill_span(slot, off, len(seg),
+                                      time.perf_counter() - t0)
             # fold whole blocks that aged past the window ([0, end) keeps
             # >= W exact rows; the decode resume row S-1 always stays
             # exact because fold_base <= S - W <= S - 1)
@@ -973,6 +1055,8 @@ class SlotScheduler:
                 first_lblk += k
                 fold_base += k * bs
                 self.fold_rows_total += k * bs
+                if self.obs is not None:
+                    self.obs.fold(slot, k * bs)
                 n_elig -= k
             off += bucket
         return cache, slot_ids, first_lblk, True
@@ -1194,6 +1278,8 @@ class SlotScheduler:
         # host-side mirror for acceptance accounting: sampled slots never
         # accept proposals in-graph, so they don't count as speculating
         self._slot_spec[slot] = eff_spec if temp == 0.0 else 0
+        if self.obs is not None:
+            self.obs.request_admitted(req.rid, slot, hit is not None)
         return True
 
     def _complete(self, slot: int, status: str) -> Completion:
@@ -1279,6 +1365,9 @@ class SlotScheduler:
                 freed.append(s)
         self._release_slot_state(freed)
         self.completed.extend(done)
+        if self.obs is not None:
+            for c in done:
+                self.obs.request_finished(c.rid, c.status, len(c.tokens))
         return done
 
     def cancel(self, rid: int, status: str = "cancelled"
@@ -1312,6 +1401,9 @@ class SlotScheduler:
         else:
             self.cancellations += 1
         self.completed.append(comp)
+        if self.obs is not None:
+            self.obs.request_finished(comp.rid, comp.status,
+                                      len(comp.tokens))
         return comp
 
     def expire_deadlines(self, now: Optional[float] = None
@@ -1358,6 +1450,8 @@ class SlotScheduler:
                  else req.key))
         self._release_slot_state([slot], deactivate=True)
         self.preemptions += 1
+        if self.obs is not None:
+            self.obs.request_preempted(req.rid, slot, len(out))
         # the continuation must not re-feed the count-min tracker (its
         # prefix was counted at first admission): memo None keeps hit
         # lookups stateless and suppresses re-admission of the extended
@@ -1455,6 +1549,8 @@ class SlotScheduler:
             del self._slot_blocks[s][:n]
             self._slot_first_lblk[s] = first + n
             self.fold_rows_total += n * self.block_size
+            if self.obs is not None:
+                self.obs.fold(s, n * self.block_size)
         if dirty:
             # sentinel the rows BEFORE the unref makes the blocks
             # re-allocatable (nothing allocates between these two lines,
@@ -1524,6 +1620,10 @@ class SlotScheduler:
                 slot = self._preempt_for(head) \
                     if self._inflight is None else None
             if slot is None or not self._admit(slot, head):
+                if slot is not None and self.obs is not None:
+                    # a free slot existed but the pool couldn't serve
+                    # the head request right now — a deferral stall
+                    self.obs.admission_deferred(head.rid)
                 break                # full / pool pressure: wait
             self._queue.pop(0)
             admitted += 1
@@ -1580,6 +1680,7 @@ class SlotScheduler:
         if toks.ndim == 2:               # plain chunk: one token per step
             toks = toks[:, :, None]
             emits = emits[:, :, None]
+        round_tokens = 0
         for t in range(toks.shape[0]):
             for s in range(toks.shape[1]):
                 if self._slot_req[s] is None:
@@ -1590,13 +1691,45 @@ class SlotScheduler:
                 self._slot_out[s].extend(
                     int(x) for x in toks[t, s][emits[t, s]])
                 self._slot_pos[s] += e
-                if self._slot_spec[s] > 0:
-                    # one verify round: slot proposed spec_k tokens and
-                    # e - 1 of them survived verification
-                    self.spec_rounds += 1
-                    self.spec_proposed += self._slot_spec[s]
-                    self.spec_accepted += e - 1
-        return self._retire()
+                round_tokens += e
+                # one verify round: slot proposed spec_k tokens and
+                # e - 1 of them survived verification
+                rr, pp, aa = spec_round_accounting(self._slot_spec[s], e)
+                if rr:
+                    self.spec_rounds += rr
+                    self.spec_proposed += pp
+                    self.spec_accepted += aa
+                    if self.obs is not None:
+                        self.obs.spec_round(self._slot_req[s].rid, pp, aa)
+        done = self._retire()
+        if self.obs is not None:
+            self._round_idx += 1
+            self.obs.chunk_collected(
+                round_tokens, len(self._queue),
+                sum(r is not None for r in self._slot_req))
+            if (self.sketch_on and self.obs.fidelity_every > 0
+                    and self._round_idx % self.obs.fidelity_every == 0):
+                self._probe_fidelity()
+            self.obs.maybe_flush(self.stats)
+        return done
+
+    def _probe_fidelity(self) -> None:
+        """Opt-in sketch-fidelity probe: per-slot relative spread of the
+        Z independent hash-row tail estimates (``kv_sketch.
+        tail_row_spread``), emitted as a gauge for every slot with
+        folded content.  Runs ONLY here — at the ``collect()`` boundary,
+        where the round's host-device sync just happened and the tail
+        tables are already materialized engine state — and only at the
+        observer's ``fidelity_every`` cadence, so the compiled chunk and
+        the sync discipline of the hot path are untouched."""
+        sp = np.asarray(self._spread_fn(self._state.cache["tail"]))
+        for s, req in enumerate(self._slot_req):
+            if req is None or not self._slot_use_sketch[s]:
+                continue
+            folded = self._slot_first_lblk[s] * self.block_size
+            if folded <= 0:
+                continue
+            self.obs.fidelity(s, req.rid, folded, float(sp[s]))
 
     def step(self) -> List[Completion]:
         """One SYNCHRONOUS scheduler round — the closed-batch

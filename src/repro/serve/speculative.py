@@ -49,6 +49,24 @@ from repro.models import transformer as tf
 from repro.serve import kv_sketch as kvs
 
 
+def round_accounting(spec_k: int, emitted: int):
+    """Host-side accounting for ONE step-row of a speculating slot:
+    given the slot's proposal budget and the tokens that committed this
+    round, return ``(rounds, proposed, accepted)``.
+
+    The round emits the accepted draft prefix PLUS the target's
+    correction/bonus token (step 3 above), so ``emitted - 1`` of the
+    ``spec_k`` proposals survived verification.  A slot with no
+    proposal budget — or a round that emitted nothing (budget already
+    spent) — contributes no accounting.  Centralised here, next to the
+    round semantics it mirrors, because both the scheduler's cumulative
+    counters and the observer's windowed ``spec.*`` series consume it
+    and must never disagree."""
+    if spec_k <= 0 or emitted <= 0:
+        return 0, 0, 0
+    return 1, spec_k, emitted - 1
+
+
 def build_spec_chunk(cfg: ModelConfig, draft_cfg: ModelConfig,
                      decode_chunk: int, spec_max: int, sample,
                      sketch=None, kernels=None):

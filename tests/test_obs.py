@@ -1,0 +1,369 @@
+"""Serve-path observability: Chrome-trace schema + span nesting,
+windowed metrics reconciling with cumulative EngineStats, log-bucket
+histogram quantiles vs a numpy oracle, kind-tagged stats merge, the
+sketch-fidelity probe, and the zero-interference contract (tracing
+on/off bitwise-identical tokens, one decode compilation)."""
+import asyncio
+import dataclasses
+import json
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import reduced_config
+from repro.models import model as M
+from repro.obs import (Histogram, MetricsRegistry, ServeObserver, Tracer,
+                       prometheus_text, write_trace)
+from repro.serve import kv_sketch as kvs
+from repro.serve.frontend import AsyncServeEngine
+from repro.serve.scheduler import EngineStats, Request, SlotScheduler
+from repro.serve.speculative import round_accounting
+
+
+@pytest.fixture(scope="module")
+def gemma():
+    cfg = reduced_config("gemma-2b")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _serve(cfg, **kw):
+    base = dict(max_batch=2, max_seq=128, decode_chunk=4,
+                prefill_bucket=16)
+    base.update(kw)
+    return dataclasses.replace(cfg.serve, **base)
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(0, cfg.vocab_size, (n,)).astype(np.int32)
+            for n in lens]
+
+
+# ---------------------------------------------------------------------------
+# metrics.py: histogram + windowed registry
+# ---------------------------------------------------------------------------
+
+
+def test_histogram_quantiles_match_numpy_oracle():
+    """Log-bucket quantiles land within one bucket (a factor of
+    ``growth``) of the exact numpy quantile over a lognormal sample —
+    the bound the geometric bucket interpolation guarantees."""
+    rng = np.random.RandomState(0)
+    xs = np.exp(rng.randn(5000) * 1.5 - 3.0)     # spans many buckets
+    h = Histogram()
+    for x in xs:
+        h.observe(float(x))
+    assert h.count == len(xs)
+    assert h.sum == pytest.approx(xs.sum(), rel=1e-6)
+    for q in (0.5, 0.9, 0.99):
+        got = h.quantile(q)
+        ref = float(np.quantile(xs, q))
+        assert ref / h.growth <= got <= ref * h.growth, (q, got, ref)
+    assert h.quantile(1.0) >= h.quantile(0.5)
+
+
+def test_histogram_edge_cases():
+    h = Histogram()
+    assert h.quantile(0.5) == 0.0                # empty
+    h.observe(0.0)                               # below lo: first bucket
+    h.observe(1e9)                               # above hi: overflow
+    assert h.count == 2
+    assert h.quantile(0.99) >= h.hi              # overflow dominates tail
+
+
+def test_window_counter_deltas_sum_to_totals():
+    """Interval windows reconcile: per-window counter deltas sum to the
+    cumulative total, rates are delta/duration, histogram window counts
+    sum to the cumulative observation count."""
+    reg = MetricsRegistry()
+    deltas, hcounts = [], []
+    for i in range(5):
+        reg.counter("c").inc(i + 1)
+        reg.counter("c").inc(0.5)
+        for _ in range(i):
+            reg.hist("h").observe(0.01 * (i + 1))
+        w = reg.window()
+        deltas.append(w["counters"]["c"]["delta"])
+        hcounts.append(w["hists"]["h"]["count"] if "h" in w["hists"]
+                       else 0)
+    assert sum(deltas) == pytest.approx(reg.counter("c").value)
+    assert sum(hcounts) == reg.hist("h").count
+    assert w["counters"]["c"]["total"] == pytest.approx(
+        reg.counter("c").value)
+    assert w["seq"] == 5
+
+
+def test_update_from_stats_and_prometheus_text():
+    reg = MetricsRegistry()
+    st = EngineStats(completed=7, blocks_peak=3, queue_depth=2)
+    reg.update_from_stats(st)
+    w = reg.window()
+    assert w["counters"]["engine.completed"]["total"] == 7.0
+    assert w["counters"]["engine.completed"]["delta"] == 7.0
+    assert w["gauges"]["engine.blocks_peak"] == 3.0    # peak -> gauge
+    assert w["gauges"]["engine.queue_depth"] == 2.0
+    reg.hist("lat").observe(0.25)
+    text = prometheus_text(reg)
+    assert "# TYPE repro_engine_completed counter" in text
+    assert "repro_engine_completed 7" in text
+    assert "# TYPE repro_engine_queue_depth gauge" in text
+    assert 'repro_lat{quantile="0.5"}' in text
+    assert "repro_lat_count 1" in text
+
+
+# ---------------------------------------------------------------------------
+# EngineStats merge kinds (satellite: counter / gauge / peak semantics)
+# ---------------------------------------------------------------------------
+
+
+def test_engine_stats_merge_kinds():
+    a = EngineStats(completed=3, blocks_peak=10, kv_peak_used_bytes=100,
+                    queue_depth=2, block_size=16, fold_rows=5)
+    b = EngineStats(completed=4, blocks_peak=7, kv_peak_used_bytes=300,
+                    queue_depth=1, block_size=16, fold_rows=0)
+    m = EngineStats.merge([a, b])
+    assert m.completed == 7                      # counter: sum
+    assert m.fold_rows == 5
+    assert m.blocks_peak == 10                   # peak: max, NOT sum
+    assert m.kv_peak_used_bytes == 300
+    assert m.queue_depth == 3                    # disjoint-queue gauge sum
+    assert m.block_size == 16                    # geometry: max, not 32
+    kinds = EngineStats.field_kinds()
+    assert kinds["completed"] == "counter"
+    assert kinds["blocks_peak"] == "peak"
+    assert kinds["queue_depth"] == "gauge"
+    assert EngineStats.merge([]) == EngineStats()
+
+
+def test_spec_round_accounting():
+    assert round_accounting(0, 3) == (0, 0, 0)
+    assert round_accounting(4, 0) == (0, 0, 0)
+    # one verify round: K proposed, emitted-1 accepted (the +1 is the
+    # verifier's own token, emitted even on zero acceptance)
+    assert round_accounting(4, 1) == (1, 4, 0)
+    assert round_accounting(4, 5) == (1, 4, 4)
+
+
+# ---------------------------------------------------------------------------
+# trace.py: schema + nesting over a real streamed workload
+# ---------------------------------------------------------------------------
+
+
+def _stream_workload(cfg, params, serve, obs, cancel_rid=None):
+    """Submit a small stream through the async front-end; optionally
+    hang up on one rid after its first delivered chunk."""
+    sched = SlotScheduler(cfg, params, serve=serve, obs=obs)
+    front = AsyncServeEngine(scheduler=sched)
+    prompts = _prompts(cfg, [6, 11, 17, 9])
+
+    async def go():
+        handles = [await front.submit(p, max_new=10, rid=i)
+                   for i, p in enumerate(prompts)]
+        outs = {}
+
+        async def consume(h):
+            toks = []
+            async for t in h.stream():
+                toks.append(t)
+                if h.rid == cancel_rid and len(toks) >= 2:
+                    h.cancel()
+            outs[h.rid] = toks
+        await asyncio.gather(*[consume(h) for h in handles])
+        return outs, {h.rid: h.completion for h in handles}
+
+    outs, comps = asyncio.run(go())
+    return sched, outs, comps
+
+
+def test_trace_valid_chrome_json_with_nested_spans(gemma, tmp_path):
+    """The exported trace is schema-valid Chrome trace-event JSON:
+    every event carries ph/name/pid/ts, async b/e pairs balance per
+    (cat, id, name), and each request's "active" (residency) span nests
+    inside its enclosing req span.  Covers ok + cancelled requests."""
+    cfg, params = gemma
+    obs = ServeObserver(tracer=Tracer(sample_rate=1.0))
+    sched, _, comps = _stream_workload(cfg, params, _serve(cfg), obs,
+                                       cancel_rid=2)
+    assert comps[2].status == "cancelled"
+    assert all(c.status == "ok" for r, c in comps.items() if r != 2)
+
+    path = tmp_path / "trace.json"
+    n = write_trace(obs.tracer, str(path))
+    doc = json.loads(path.read_text())
+    ev = doc["traceEvents"]
+    assert len(ev) == n > 0
+    for e in ev:
+        assert e["ph"] in ("b", "e", "X", "i", "C")
+        assert isinstance(e["name"], str) and e["name"]
+        assert isinstance(e["ts"], (int, float))
+        assert e["pid"] == 1
+        if e["ph"] in ("b", "e"):
+            assert e["cat"] == "request" and "id" in e
+        if e["ph"] == "X":
+            assert e["dur"] >= 0
+
+    # async spans balance, and "active" nests inside req{rid}
+    for rid in comps:
+        spans = [e for e in ev
+                 if e["ph"] in ("b", "e") and e["id"] == rid]
+        for name in (f"req{rid}", "active"):
+            named = [e for e in spans if e["name"] == name]
+            bs = [e for e in named if e["ph"] == "b"]
+            es = [e for e in named if e["ph"] == "e"]
+            assert len(bs) == len(es) >= 1, (rid, name)
+        req_b = min(e["ts"] for e in spans if e["name"] == f"req{rid}"
+                    and e["ph"] == "b")
+        req_e = max(e["ts"] for e in spans if e["name"] == f"req{rid}"
+                    and e["ph"] == "e")
+        for e in spans:
+            if e["name"] == "active":
+                assert req_b <= e["ts"] <= req_e, (rid, e)
+
+    # pump phases present as complete spans on the pump track
+    assert any(e["ph"] == "X" and e["name"] == "dispatch" for e in ev)
+    assert any(e["ph"] == "X" and e["name"] == "collect" for e in ev)
+    assert any(e["ph"] == "C" and e["name"] == "engine" for e in ev)
+
+
+def test_trace_sampling_deterministic():
+    tr = Tracer(sample_rate=0.5)
+    picks = [tr.sampled(rid) for rid in range(200)]
+    assert picks == [tr.sampled(rid) for rid in range(200)]
+    assert 20 < sum(picks) < 180          # hash spreads, not all-or-none
+    assert Tracer(sample_rate=1.0).sampled(7)
+    assert not Tracer(sample_rate=0.0).sampled(7)
+
+
+def test_tracer_bounded_drops_counted():
+    tr = Tracer(sample_rate=1.0, max_events=10)
+    for i in range(50):
+        tr.instant(f"e{i}")
+    ev = tr.events()
+    assert len(ev) == 11                  # cap + one metadata instant
+    assert ev[-1]["name"] == "tracer_dropped_events"
+    assert ev[-1]["args"]["dropped"] == 40
+
+
+# ---------------------------------------------------------------------------
+# zero-interference: tracing on/off bitwise, one compile
+# ---------------------------------------------------------------------------
+
+
+def test_tracing_onoff_bitwise_identical_one_compile(gemma, tmp_path):
+    """Full observability (tracing + per-round metrics flush) changes
+    NOTHING about the served tokens and adds no compilation: the
+    observer is host-side bookkeeping only."""
+    cfg, params = gemma
+    serve = _serve(cfg)
+    s_off, out_off, _ = _stream_workload(cfg, params, serve, None)
+    obs = ServeObserver(tracer=Tracer(sample_rate=1.0),
+                        metrics_path=str(tmp_path / "m.jsonl"),
+                        metrics_interval=0.0)
+    s_on, out_on, _ = _stream_workload(cfg, params, serve, obs)
+    assert out_on == out_off
+    assert s_off.decode_compilations == 1
+    assert s_on.decode_compilations == 1
+
+
+# ---------------------------------------------------------------------------
+# windowed engine counters reconcile with cumulative EngineStats
+# ---------------------------------------------------------------------------
+
+
+def test_windowed_engine_counters_sum_to_engine_stats(gemma, tmp_path):
+    """With a flush every decode round, the per-window deltas of every
+    counter-kind ``engine.*`` series sum back to the final cumulative
+    EngineStats value — windows partition the counters exactly.  The
+    JSONL sink holds the same windows the observer retained."""
+    cfg, params = gemma
+    path = tmp_path / "metrics.jsonl"
+    obs = ServeObserver(metrics_path=str(path), metrics_interval=0.0)
+    sched, _, comps = _stream_workload(cfg, params, _serve(cfg), obs,
+                                       cancel_rid=1)
+    final = sched.stats()
+    obs.close(stats=final)
+
+    lines = [json.loads(ln) for ln in path.read_text().splitlines()]
+    assert lines and len(lines) == len(obs.windows)
+    kinds = EngineStats.field_kinds()
+    for f, kind in kinds.items():
+        if kind != "counter":
+            continue
+        name = f"engine.{f}"
+        total = sum(w["counters"].get(name, {"delta": 0.0})["delta"]
+                    for w in lines)
+        assert total == pytest.approx(float(getattr(final, f))), (
+            name, total, getattr(final, f))
+    # the serve-layer token counter reconciles against completions too
+    served = sum(len(c.tokens) for c in comps.values())
+    got = sum(w["counters"]["serve.tokens_delivered"]["delta"]
+              for w in lines if "serve.tokens_delivered" in w["counters"])
+    assert got == served
+    st = [w["counters"]["serve.completions.cancelled"]["total"]
+          for w in lines if "serve.completions.cancelled" in w["counters"]]
+    assert st and st[-1] == 1.0
+    # latency series came through the windows
+    assert any("serve.ttft_s" in w["hists"] for w in lines)
+
+
+# ---------------------------------------------------------------------------
+# sketch-fidelity probe
+# ---------------------------------------------------------------------------
+
+
+def test_tail_row_spread_math():
+    """Empty tail -> exactly 0 (guarded median); folded rows -> finite,
+    non-negative, and only for slots that actually folded."""
+    tail = {"k": np.zeros((2, 3, 3, 8, 1, 4), np.float32),
+            "v": np.zeros((2, 3, 3, 8, 1, 4), np.float32)}
+    sp = np.asarray(kvs.tail_row_spread(
+        {k: jax.numpy.asarray(v) for k, v in tail.items()}))
+    assert sp.shape == (3,)
+    np.testing.assert_array_equal(sp, 0.0)
+
+    rng = np.random.RandomState(0)
+    tail["k"][:, 1] = rng.randn(2, 3, 8, 1, 4)
+    tail["v"][:, 1] = rng.randn(2, 3, 8, 1, 4)
+    sp = np.asarray(kvs.tail_row_spread(
+        {k: jax.numpy.asarray(v) for k, v in tail.items()}))
+    assert sp[0] == 0.0 and sp[2] == 0.0
+    assert np.isfinite(sp[1]) and sp[1] >= 0.0
+
+
+def test_fidelity_probe_emits_gauge_for_folded_slot(gemma):
+    """A long-context sketched request (context >> window) with
+    ``fidelity_every=1`` produces a tail-spread gauge + histogram series
+    for its folded slot — computed at collect() boundaries only, with
+    the engine still compiling decode once."""
+    cfg, params = gemma
+    bs = cfg.serve.kv_block_size
+    serve = _serve(cfg, max_batch=1, max_seq=256, num_kv_blocks=24,
+                   kv_sketch_window=2 * bs)
+    obs = ServeObserver(metrics_interval=0.0, fidelity_every=1)
+    sched = SlotScheduler(cfg, params, serve=serve, obs=obs)
+    p = _prompts(cfg, [150])[0]
+    done = sched.run([Request(rid=0, tokens=p, max_new=6)])
+    assert done[0].status == "ok"
+    assert sched.decode_compilations == 1
+    assert sched.fold_rows_total > 0
+    w = obs.flush()
+    assert "kv.tail_spread.slot0" in w["gauges"]
+    spread = w["gauges"]["kv.tail_spread.slot0"]
+    assert math.isfinite(spread) and spread >= 0.0
+    assert w["hists"].get("kv.tail_spread", {"count": 0})["count"] >= 0
+    assert obs.registry.hist("kv.tail_spread").count >= 1
+
+
+def test_fidelity_probe_off_by_default(gemma):
+    cfg, params = gemma
+    bs = cfg.serve.kv_block_size
+    serve = _serve(cfg, max_batch=1, max_seq=256, num_kv_blocks=24,
+                   kv_sketch_window=2 * bs)
+    obs = ServeObserver(metrics_interval=0.0)      # fidelity_every=0
+    sched = SlotScheduler(cfg, params, serve=serve, obs=obs)
+    sched.run([Request(rid=0, tokens=_prompts(cfg, [150])[0], max_new=4)])
+    w = obs.flush()
+    assert not any(k.startswith("kv.tail_spread") for k in w["gauges"])
